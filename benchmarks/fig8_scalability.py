@@ -1,0 +1,90 @@
+"""Figure 8 — C3B throughput vs network size / message size / geo.
+
+Reproduces the paper's scalability study with the analytic capacity model
+(validated trends) plus step-simulator quack-throughput measurements for
+the protocol dynamics. Paper reference points are printed next to each
+model ratio.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (NetworkModel, RSMConfig, SimConfig,
+                        analytic_throughput, run_picsou)
+
+# paper-reported PICSOU/ATA ratios [§6.1]
+PAPER = {
+    (4, 1e2, "lan"): 1.84, (19, 1e2, "lan"): 8.4,
+    (4, 1e6, "lan"): 3.7, (19, 1e6, "lan"): 13.4,
+    (4, 1e6, "geo"): 9.7, (19, 1e6, "geo"): 24.0,
+}
+
+
+def rows():
+    out = []
+    for n in (4, 7, 10, 13, 16, 19):
+        f = max((n - 1) // 3, 1)
+        cfg = RSMConfig(n=n, u=f, r=f)
+        for msg, netname in ((1e2, "lan"), (1e6, "lan"), (1e6, "geo")):
+            net = (NetworkModel.geo(msg) if netname == "geo"
+                   else NetworkModel.lan(msg))
+            p = analytic_throughput("picsou", cfg, cfg, net)
+            a = analytic_throughput("ata", cfg, cfg, net)
+            o = analytic_throughput("ost", cfg, cfg, net)
+            ratio = (p["throughput_msgs_per_s"]
+                     / max(a["throughput_msgs_per_s"], 1e-9))
+            paper = PAPER.get((n, msg, netname), float("nan"))
+            out.append({
+                "n": n, "msg_bytes": msg, "net": netname,
+                "picsou": p["throughput_msgs_per_s"],
+                "ata": a["throughput_msgs_per_s"],
+                "ost": o["throughput_msgs_per_s"],
+                "ratio": ratio, "paper_ratio": paper,
+                "picsou_bottleneck": p["bottleneck"],
+                "ata_bottleneck": a["bottleneck"],
+            })
+    return out
+
+
+def simulator_points():
+    """Quack throughput (msgs/round) from the full protocol simulator."""
+    out = []
+    for n in (4, 10, 19):
+        f = max((n - 1) // 3, 1)
+        cfg = RSMConfig(n=n, u=f, r=f)
+        t0 = time.time()
+        run = run_picsou(cfg, cfg, SimConfig(n_msgs=256, steps=120,
+                                             window=4, phi=64))
+        dt = time.time() - t0
+        out.append({
+            "n": n,
+            "quacks_per_round": run.quack_throughput_per_step(),
+            "cross_copies_per_msg": run.cross_copies_per_msg,
+            "intra_copies_per_msg": run.intra_copies_per_msg,
+            "sim_wall_s": round(dt, 2),
+        })
+    return out
+
+
+def main():
+    print("# Figure 8 — scalability (analytic capacity model)")
+    print("n,msg_bytes,net,picsou_msgs_s,ata_msgs_s,ost_msgs_s,"
+          "ratio,paper_ratio,picsou_bneck,ata_bneck")
+    for r in rows():
+        print(f"{r['n']},{r['msg_bytes']:.0f},{r['net']},"
+              f"{r['picsou']:.1f},{r['ata']:.1f},{r['ost']:.1f},"
+              f"{r['ratio']:.2f},{r['paper_ratio']:.2f},"
+              f"{r['picsou_bottleneck']},{r['ata_bottleneck']}")
+    print("# Figure 8 — simulator quack throughput")
+    print("n,quacks_per_round,cross_per_msg,intra_per_msg,sim_wall_s")
+    for r in simulator_points():
+        print(f"{r['n']},{r['quacks_per_round']:.2f},"
+              f"{r['cross_copies_per_msg']:.3f},"
+              f"{r['intra_copies_per_msg']:.2f},{r['sim_wall_s']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Figure 9 — failures (33% crashed replicas) and stake scenarios.
+
+(i) stake scenarios: Graded / Unfair / Fair / Large (§6.3);
+(ii) 33% random crash failures: simulator measures actual resend overhead,
+the capacity model converts it to throughput vs failure-free ATA.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (FailureScenario, NetworkModel, RSMConfig, SimConfig,
+                        analytic_throughput, run_picsou)
+from repro.core.protocols import staked_picsou_throughput
+
+
+def stake_scenarios(n=19, msg=1e6):
+    net = NetworkModel.lan(msg)
+    nic = net.nic_Bps
+    base = staked_picsou_throughput(np.ones(n), nic, net)
+    rows = []
+
+    def add(name, stakes, nics):
+        r = staked_picsou_throughput(stakes, nics, net)
+        rows.append({
+            "scenario": name,
+            "msgs_per_s": r["throughput_msgs_per_s"],
+            "vs_equal": r["throughput_msgs_per_s"]
+            / base["throughput_msgs_per_s"],
+        })
+
+    add("equal", np.ones(n), nic)
+    add("graded", np.arange(1, n + 1, dtype=float), nic)   # stake = id
+    unfair = np.ones(n) * (0.5 / (n - 1))
+    unfair[0] = 0.5
+    add("unfair", unfair, nic)
+    fair_nics = np.ones(n) * nic
+    fair_nics[0] = 10 * nic                                 # 10x bandwidth
+    add("fair", unfair, fair_nics)
+    add("large", np.ones(n) * 1000.0, nic)                  # LCM/apportion
+    return rows
+
+
+def failure_runs():
+    rows = []
+    for n in (4, 10, 19):
+        f = max((n - 1) // 3, 1)
+        cfg = RSMConfig(n=n, u=f, r=f)
+        fails = FailureScenario.crash_fraction(n, n, 0.33, seed=1)
+        run = run_picsou(cfg, cfg,
+                         SimConfig(n_msgs=128, steps=600, window=2, phi=32),
+                         fails)
+        resend_factor = run.resends_per_msg
+        net = NetworkModel.lan(1e6)
+        p = analytic_throughput("picsou", cfg, cfg, net,
+                                resend_factor=resend_factor)
+        a = analytic_throughput("ata", cfg, cfg, net)
+        rows.append({
+            "n": n,
+            "delivered": run.all_delivered,
+            "resends_per_msg": resend_factor,
+            "picsou_msgs_s": p["throughput_msgs_per_s"],
+            "ata_msgs_s": a["throughput_msgs_per_s"],
+            "ratio": p["throughput_msgs_per_s"]
+            / max(a["throughput_msgs_per_s"], 1e-9),
+        })
+    return rows
+
+
+def main():
+    print("# Figure 9(i) — stake scenarios (n=19, 1MB)")
+    print("scenario,msgs_per_s,vs_equal")
+    for r in stake_scenarios():
+        print(f"{r['scenario']},{r['msgs_per_s']:.1f},{r['vs_equal']:.3f}")
+    print("# Figure 9(ii) — 33% crash failures (1MB)")
+    print("n,delivered,resends_per_msg,picsou_msgs_s,ata_msgs_s,ratio")
+    for r in failure_runs():
+        print(f"{r['n']},{r['delivered']},{r['resends_per_msg']:.3f},"
+              f"{r['picsou_msgs_s']:.1f},{r['ata_msgs_s']:.1f},"
+              f"{r['ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints each figure's detailed CSV block, then a summary line per table in
+``name,us_per_call,derived`` form (us_per_call = wall time of the harness
+function; derived = the table's headline number).
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+
+def _timed(name, fn):
+    t0 = time.time()
+    derived = fn()
+    us = (time.time() - t0) * 1e6
+    print(f"{name},{us:.0f},{derived}")
+    return derived
+
+
+def fig8():
+    from benchmarks import fig8_scalability as m
+    rs = m.rows()
+    m.main()
+    geo19 = [r for r in rs if r["n"] == 19 and r["net"] == "geo"][0]
+    return f"picsou_vs_ata_geo_n19={geo19['ratio']:.1f}x(paper 24x)"
+
+
+def fig9():
+    from benchmarks import fig9_failures_stakes as m
+    m.main()
+    rows = m.stake_scenarios()
+    unfair = [r for r in rows if r["scenario"] == "unfair"][0]
+    return f"unfair_drop={1 - unfair['vs_equal']:.0%}(paper 87%)"
+
+
+def fig10():
+    from benchmarks import fig10_heterogeneous as m
+    rs = m.rows()
+    m.main()
+    worst = max(r["overhead_frac"] for r in rs)
+    return f"worst_overhead={worst:.1%}(paper <15%)"
+
+
+def thm1():
+    from benchmarks import bench_retransmit as m
+    m.main()
+    curve = m.delivery_probability_curve(max_retries=8)
+    return f"p_delivery_8_retries={curve[-1]['p_delivery']:.4f}(paper 99.9%)"
+
+
+def kernels():
+    from benchmarks import bench_kernels as m
+    m.main()
+    return "interpret-mode (see EXPERIMENTS.md roofline for TPU story)"
+
+
+def crosspod():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
+    env.setdefault("PYTHONPATH", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_crosspod"],
+        env=env, capture_output=True, text=True, timeout=900)
+    print(out.stdout, end="")
+    if out.returncode != 0:
+        print(out.stderr[-1000:])
+        return "FAILED"
+    lines = [l for l in out.stdout.splitlines() if l.startswith("picsou,")]
+    return f"dcn_reduction={lines[-1].split(',')[-1]}x" if lines else "n/a"
+
+
+def main() -> None:
+    tables = (("fig8_scalability", fig8),
+              ("fig9_failures_stakes", fig9),
+              ("fig10_heterogeneous", fig10),
+              ("thm1_retransmit", thm1),
+              ("kernels", kernels),
+              ("crosspod_collectives", crosspod))
+    print("== PICSOU / C3B benchmark suite ==")
+    summary = []
+    for name, fn in tables:
+        print(f"\n### {name}")
+        t0 = time.time()
+        try:
+            derived = fn()
+        except Exception as e:  # noqa: BLE001
+            derived = f"FAILED:{type(e).__name__}"
+        summary.append((name, (time.time() - t0) * 1e6, derived))
+    print("\n== summary (name,us_per_call,derived) ==")
+    for name, us, derived in summary:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Batched serving: prefill + ring-buffer KV decode on a small mesh.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python examples/serve_decode.py --arch mixtral-8x22b-smoke
+"""
+
+import argparse
+import os
+import sys
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import run  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x22b-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=12)
+    a = ap.parse_args()
+    args = argparse.Namespace(arch=a.arch, batch=a.batch, prompt_len=32,
+                              gen=a.gen, mesh="2x2", seed=0)
+    run(args)
+
+
+if __name__ == "__main__":
+    main()

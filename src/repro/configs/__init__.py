@@ -1,0 +1,23 @@
+"""Architecture registry: one module per assigned architecture.
+
+Importing this package registers all configs; use
+``repro.configs.get_config("mixtral-8x22b")`` (or ``"<name>-smoke"``).
+"""
+
+from .base import (SHAPES, ModelConfig, ShapeSpec, get_config, list_configs,
+                   register, shape_applicable)
+
+# Import for registration side effects (one module per assigned arch).
+from . import granite_34b        # noqa: F401
+from . import qwen2_72b          # noqa: F401
+from . import granite_8b         # noqa: F401
+from . import starcoder2_3b      # noqa: F401
+from . import hymba_1_5b        # noqa: F401
+from . import deepseek_moe_16b   # noqa: F401
+from . import mixtral_8x22b      # noqa: F401
+from . import rwkv6_7b           # noqa: F401
+from . import whisper_small      # noqa: F401
+from . import llama32_vision_11b  # noqa: F401
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "get_config",
+           "list_configs", "register", "shape_applicable"]

@@ -1,0 +1,13 @@
+"""granite-34b [dense]: 88L d_model=6144 48H (GQA kv=1 = MQA) d_ff=24576
+vocab=49152 — llama-arch, code [arXiv:2405.04324; hf]."""
+from .base import ModelConfig, register
+
+
+@register("granite-34b")
+def granite_34b() -> ModelConfig:
+    return ModelConfig(
+        name="granite-34b", family="dense",
+        n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1,
+        d_ff=24576, vocab=49152, head_dim=128,
+        source="[arXiv:2405.04324; hf]",
+    )

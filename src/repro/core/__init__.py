@@ -1,0 +1,40 @@
+"""PICSOU / C3B protocol core — the paper's contribution.
+
+Public API:
+
+    from repro.core import (RSMConfig, NetworkModel, SimConfig,
+                            FailureScenario, run_picsou,
+                            analytic_throughput)
+
+    run = run_picsou(RSMConfig.bft(1), RSMConfig.bft(1))
+    assert run.all_delivered and run.cross_copies_per_msg < 1.01
+"""
+
+from .gc import ack_floor_from_reports, collectable
+from .protocols import (C3BRun, analytic_throughput, ata_loads, ost_loads,
+                        picsou_loads, run_picsou)
+from .quack import (claim_bitmask, cumulative_ack, missing_below_horizon,
+                    selective_quack, weighted_quorum_prefix)
+from .retransmit import (declared_lost, elect_retransmitter,
+                         faulty_pair_bound, max_retransmissions,
+                         theorem1_resends)
+from .scheduler import (dss_sequence, hamilton_apportion, lottery_sequence,
+                        round_robin_sequence, sender_assignment,
+                        skewed_rr_sequence)
+from .simulator import SimResult, SimSpec, build_spec, run_simulation
+from .types import (FailureScenario, NetworkModel, RSMConfig, SimConfig,
+                    lcm_scale_factors)
+
+__all__ = [
+    "RSMConfig", "NetworkModel", "SimConfig", "FailureScenario",
+    "SimSpec", "SimResult", "build_spec", "run_simulation",
+    "C3BRun", "run_picsou", "analytic_throughput",
+    "picsou_loads", "ata_loads", "ost_loads",
+    "cumulative_ack", "claim_bitmask", "missing_below_horizon",
+    "weighted_quorum_prefix", "selective_quack",
+    "elect_retransmitter", "declared_lost", "max_retransmissions",
+    "faulty_pair_bound", "theorem1_resends",
+    "hamilton_apportion", "dss_sequence", "skewed_rr_sequence",
+    "lottery_sequence", "round_robin_sequence", "sender_assignment",
+    "collectable", "ack_floor_from_reports", "lcm_scale_factors",
+]

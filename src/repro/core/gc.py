@@ -1,0 +1,45 @@
+"""Garbage collection (§4.3), including the Byzantine GC-stall defence.
+
+Naive rule: a QUACKed message has provably reached an honest receiver, so
+the sender may drop it. The paper's counterexample: a Byzantine receiver
+broadcasts m_k to exactly u_r+1 replicas of which u_r are faulty; a QUACK
+forms, m_k is GC'd, the faulty replicas go silent — now no QUACK can ever
+form past k and honest receivers keep duplicate-acking a message the sender
+no longer holds.
+
+Fix: when a sender sees a duplicate QUACK for k' below its GC frontier, it
+piggybacks its *highest quacked sequence number* k on outgoing traffic.
+After ``r_s + 1`` distinct senders (stake-weighted) report >= k, receivers
+know >= 1 honest sender attests that every message <= k reached *some*
+honest receiver, and may advance their cumulative ack floor to k (§4.3
+strategy (1); strategy (2) — fetching m from peers — is modelled by the
+intra-RSM broadcast already).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .quack import weighted_quorum_prefix
+
+__all__ = ["collectable", "ack_floor_from_reports"]
+
+
+def collectable(quacked_prefix: jnp.ndarray, m: int) -> jnp.ndarray:
+    """(n_s,) quacked prefix -> (n_s, M) bool of GC-able messages."""
+    idx = jnp.arange(m, dtype=jnp.int32)
+    return idx[None, :] < quacked_prefix[:, None]
+
+
+def ack_floor_from_reports(hq_reports: jnp.ndarray,
+                           sender_stakes: jnp.ndarray,
+                           r_s_threshold: float) -> jnp.ndarray:
+    """Receivers' provable ack floor from highest-quacked metadata.
+
+    hq_reports: (n_r, n_s) int — highest-quacked seqno claimed by each
+    sender, as heard by each receiver (0 if never heard). The floor is the
+    largest k such that senders totalling >= r_s + 1 stake claim >= k —
+    the same order-statistic as a QUACK, on the sender side.
+    Returns (n_r,) int32.
+    """
+    return weighted_quorum_prefix(hq_reports, sender_stakes, r_s_threshold)

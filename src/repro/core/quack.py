@@ -1,0 +1,114 @@
+"""QUACK (cumulative quorum acknowledgement) primitives (§4.1, §5.1).
+
+All functions are pure jnp array ops so they can run inside ``lax.scan``
+(simulator) or be jit-compiled standalone. Sequence numbers are 0-based and
+acks are *counts*: ``ack == p`` means "I hold the contiguous prefix of p
+messages m_0 .. m_{p-1}". A QUACK for prefix p forms at a sender once
+replicas totalling ``u_r + 1`` stake have acked >= p — at least one of those
+is honest, and an honest receiver broadcasts intra-RSM, so delivery of
+m_0..m_{p-1} is guaranteed (§4.1 "Detecting successful sends").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "cumulative_ack",
+    "claim_bitmask",
+    "weighted_quorum_prefix",
+    "selective_quack",
+    "missing_below_horizon",
+]
+
+
+def cumulative_ack(received: jnp.ndarray) -> jnp.ndarray:
+    """Highest contiguous prefix count per receiver.
+
+    received: (n_r, M) bool -> (n_r,) int32.
+    """
+    prefix = jnp.cumprod(received.astype(jnp.int32), axis=-1)
+    return prefix.sum(axis=-1).astype(jnp.int32)
+
+
+def missing_below_horizon(received: jnp.ndarray, phi: int) -> jnp.ndarray:
+    """Which messages a receiver reports missing, bounded by the phi-list.
+
+    A receiver only reports gaps below its highest received index (anything
+    above could simply not have been sent yet), and at most ``phi`` of them
+    (§4.2 Parallel Cumulative Acknowledgments). Returns (n_r, M) bool.
+    """
+    m = received.shape[-1]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    # top[j] = 1 + highest received index (0 if nothing received)
+    any_recv = received.any(axis=-1)
+    top = jnp.where(any_recv,
+                    m - jnp.argmax(received[..., ::-1], axis=-1),
+                    0).astype(jnp.int32)
+    missing = (~received) & (idx[None, :] < top[:, None])
+    # keep only the first `phi` missing entries per row
+    rank = jnp.cumsum(missing.astype(jnp.int32), axis=-1)
+    return missing & (rank <= phi)
+
+
+def claim_bitmask(received: jnp.ndarray, phi: int):
+    """Receiver's honest ack payload: (cum_ack, claim, claim_known).
+
+    claim_known[j, k] — the ack message from j describes the status of k
+    (true for all k below the horizon where <= phi gaps exist);
+    claim[j, k]      — j claims to have received k (only meaningful where
+    claim_known).  This is exactly "cumulative counter + phi-list" in array
+    form: below the horizon, claim == received; missing list = the gaps.
+    """
+    m = received.shape[-1]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    cum = cumulative_ack(received)
+    miss = missing_below_horizon(received, phi)
+    # horizon: everything strictly below the (phi+1)-th missing index is
+    # described. rank counts missing entries; positions with rank <= phi and
+    # (missing => in the reported list) are known.
+    missing_all = (~received)
+    rank_all = jnp.cumsum(missing_all.astype(jnp.int32), axis=-1)
+    # (phi+1)-th missing position per row (or M if fewer than phi+1 gaps)
+    over = rank_all > phi
+    horizon = jnp.where(over.any(axis=-1), jnp.argmax(over, axis=-1), m)
+    # also bounded by top (we cannot claim receipt of unseen suffix): known
+    # region = [0, max(horizon, cum)) union received-with-rank<=phi.
+    known = idx[None, :] < horizon[:, None]
+    claim = received & known
+    # everything below cum is received by definition of cum:
+    claim = claim | (idx[None, :] < cum[:, None])
+    known = known | (idx[None, :] < cum[:, None])
+    del miss
+    return cum, claim, known
+
+
+def weighted_quorum_prefix(ack_vals: jnp.ndarray, stakes: jnp.ndarray,
+                           threshold: float) -> jnp.ndarray:
+    """Largest prefix p such that stake >= threshold has acked >= p (§5.1).
+
+    ack_vals: (..., n_r) int; stakes: (n_r,); returns (...,) int32.
+    Sort acks descending, accumulate stake, and take the largest ack value
+    at which the running stake first reaches the threshold.
+    """
+    order = jnp.argsort(-ack_vals, axis=-1)
+    sorted_acks = jnp.take_along_axis(ack_vals, order, axis=-1)
+    sorted_stakes = jnp.take_along_axis(
+        jnp.broadcast_to(stakes, ack_vals.shape), order, axis=-1)
+    cw = jnp.cumsum(sorted_stakes, axis=-1)
+    ok = cw >= threshold
+    idx = jnp.argmax(ok, axis=-1)  # first position where quorum reached
+    val = jnp.take_along_axis(sorted_acks, idx[..., None], axis=-1)[..., 0]
+    return jnp.where(ok.any(axis=-1), val, 0).astype(jnp.int32)
+
+
+def selective_quack(known_has: jnp.ndarray, stakes: jnp.ndarray,
+                    threshold: float) -> jnp.ndarray:
+    """Per-message QUACK with phi-list info (§4.2 parallel recovery).
+
+    known_has: (..., n_r, M) bool — sender's knowledge that receiver j claims
+    to hold message k. Returns (..., M) bool: stake-weighted count >= u_r+1.
+    """
+    w = jnp.einsum("...jm,j->...m", known_has.astype(stakes.dtype), stakes)
+    return w >= threshold

@@ -1,0 +1,215 @@
+"""Readable pure-numpy reference simulator (the protocol oracle).
+
+This mirrors ``simulator.py`` step-for-step but in explicit loops, so the
+protocol logic can be read top-to-bottom against §4–§5 of the paper and the
+vectorized implementation can be cross-checked exactly
+(``tests/test_simulator.py::test_jax_matches_reference``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from .simulator import SimSpec
+
+__all__ = ["run_reference"]
+
+
+@dataclasses.dataclass
+class RefResult:
+    quack_time: np.ndarray    # (n_s, M)
+    deliver_time: np.ndarray  # (M,)
+    retry: np.ndarray         # (n_s, M)
+    recv_has: np.ndarray      # (n_r, M)
+    cross_msgs: np.ndarray    # (T,)
+    intra_msgs: np.ndarray    # (T,)
+    resends: np.ndarray       # (T,)
+
+
+def _cum(received_row: np.ndarray) -> int:
+    p = 0
+    for v in received_row:
+        if not v:
+            break
+        p += 1
+    return p
+
+
+def _claim_and_missing(received_row: np.ndarray, phi: int):
+    """Honest ack payload: (cum, claim bitmask, missing list<=phi)."""
+    m = received_row.shape[0]
+    cum = _cum(received_row)
+    top = 0
+    for k in range(m - 1, -1, -1):
+        if received_row[k]:
+            top = k + 1
+            break
+    missing = [k for k in range(top) if not received_row[k]][:phi]
+    # horizon: strictly below the (phi+1)-th missing index
+    gaps = [k for k in range(m) if not received_row[k]]
+    horizon = gaps[phi] if len(gaps) > phi else m
+    claim = np.zeros(m, dtype=bool)
+    for k in range(m):
+        if k < cum or (k < horizon and received_row[k]):
+            claim[k] = True
+    return cum, claim, missing
+
+
+def _quorum_prefix(vals: np.ndarray, stakes: np.ndarray, thr: float) -> int:
+    order = np.argsort(-vals, kind="stable")
+    w = 0.0
+    for i in order:
+        w += stakes[i]
+        if w >= thr:
+            return int(vals[i])
+    return 0
+
+
+def run_reference(spec: SimSpec) -> RefResult:
+    n_s, n_r, m, phi = spec.n_s, spec.n_r, spec.m, spec.phi
+    st_s = np.asarray(spec.stakes_s)
+    st_r = np.asarray(spec.stakes_r)
+    orig_sender = np.asarray(spec.orig_sender)
+    orig_recv = np.asarray(spec.orig_recv)
+    orig_step = np.asarray(spec.orig_step)
+    rs_seq = np.asarray(spec.rs_seq)
+    rr_seq = np.asarray(spec.rr_seq)
+    ls, lr = len(rs_seq), len(rr_seq)
+    crash_s = np.asarray(spec.crash_s)
+    crash_r = np.asarray(spec.crash_r)
+    byz_send_drop = np.asarray(spec.byz_send_drop)
+    byz_recv_drop = np.asarray(spec.byz_recv_drop)
+    byz_ack_advance = np.asarray(spec.byz_ack_advance)
+    byz_ack_low = np.asarray(spec.byz_ack_low)
+    byz_bcast_partial = np.asarray(spec.byz_bcast_partial)
+    honest_r = ((crash_r < 0) & ~(byz_recv_drop | byz_ack_low
+                                  | (byz_ack_advance > 0)
+                                  | byz_bcast_partial))
+
+    recv_has = np.zeros((n_r, m), dtype=bool)
+    bcast_q = np.zeros((n_r, m), dtype=bool)
+    bcast_done = np.zeros((n_r, m), dtype=bool)
+    known = np.zeros((n_s, n_r, m), dtype=bool)
+    complaint = np.zeros((n_s, n_r, m), dtype=bool)
+    repeat_c = np.zeros((n_s, n_r, m), dtype=bool)
+    last_cum = np.full((n_s, n_r), -1, dtype=np.int64)
+    retry = np.zeros((n_s, m), dtype=np.int64)
+    quack_time = np.full((n_s, m), -1, dtype=np.int64)
+    deliver_time = np.full(m, -1, dtype=np.int64)
+    hq_reports = np.zeros((n_r, n_s), dtype=np.int64)
+    ack_floor = np.zeros(n_r, dtype=np.int64)
+
+    cross_hist: List[int] = []
+    intra_hist: List[int] = []
+    resend_hist: List[int] = []
+
+    def quacked_at(l: int) -> np.ndarray:
+        w = (known[l].astype(np.float64) * st_r[:, None]).sum(axis=0)
+        return w >= spec.quack_thresh
+
+    for t in range(spec.steps):
+        alive_s = (crash_s < 0) | (t < crash_s)
+        alive_r = (crash_r < 0) | (t < crash_r)
+
+        # (1) broadcasts land
+        intra = 0
+        new_recv = np.zeros((n_r, m), dtype=bool)
+        for j in range(n_r):
+            if not alive_r[j]:
+                continue
+            for k in range(m):
+                if bcast_q[j, k]:
+                    targets = (range(min(spec.bcast_limit, n_r))
+                               if byz_bcast_partial[j] else range(n_r))
+                    for i in targets:
+                        if i == j:
+                            continue
+                        intra += 1
+                        if alive_r[i]:
+                            new_recv[i, k] = True
+                    bcast_done[j, k] = True
+        bcast_q[:] = False
+        recv_has |= new_recv
+
+        # (2) retransmissions (from knowledge as of t-1)
+        resends = []  # (sender, msg, target)
+        for l in range(n_s):
+            qk = quacked_at(l)
+            for k in range(m):
+                w = float((repeat_c[l, :, k] * st_r).sum())
+                if w >= spec.dup_thresh and not qk[k] and orig_step[k] < t:
+                    retry[l, k] += 1
+                    complaint[l, :, k] = False
+                    repeat_c[l, :, k] = False
+                    if rs_seq[(k + retry[l, k]) % ls] == l:
+                        if alive_s[l] and not byz_send_drop[l]:
+                            tgt = rr_seq[(orig_recv[k] + retry[l, k]) % lr]
+                            resends.append((l, k, int(tgt)))
+
+        # (3) original sends + landing
+        wire = []  # (sender, msg, target)
+        for k in range(m):
+            if orig_step[k] == t:
+                l = orig_sender[k]
+                if alive_s[l] and not byz_send_drop[l]:
+                    wire.append((int(l), k, int(orig_recv[k])))
+        wire.extend(resends)
+        qp_prev = np.array([int(np.cumprod(quacked_at(l)).sum())
+                            for l in range(n_s)])
+        for (l, k, i) in wire:
+            if alive_r[i]:
+                hq_reports[i, l] = max(hq_reports[i, l], qp_prev[l])
+                if not byz_recv_drop[i]:
+                    if not recv_has[i, k]:
+                        recv_has[i, k] = True
+                        if not bcast_done[i, k]:
+                            bcast_q[i, k] = True
+        for k in range(m):
+            if deliver_time[k] < 0 and (recv_has[:, k] & honest_r).any():
+                deliver_time[k] = t
+
+        # (4) acks
+        for j in range(n_r):
+            if not alive_r[j]:
+                continue
+            ack_floor[j] = max(ack_floor[j],
+                               _quorum_prefix(hq_reports[j], st_s,
+                                              spec.hq_thresh))
+            eff = recv_has[j].copy()
+            eff[:ack_floor[j]] = True
+            cum, claim, missing = _claim_and_missing(eff, phi)
+            if byz_ack_low[j]:
+                cum, claim, missing = 0, np.zeros(m, bool), list(range(phi))
+            elif byz_ack_advance[j] > 0:
+                cum = min(cum + int(byz_ack_advance[j]), m)
+                claim = np.arange(m) < cum
+                missing = []
+            l = (j + t) % n_s
+            known[l, j] |= claim
+            newc = np.zeros(m, dtype=bool)
+            for k in missing:
+                if k < m:
+                    newc[k] = True
+            if last_cum[l, j] == cum and cum < m:
+                newc[cum] = True
+            repeat_c[l, j] |= complaint[l, j] & newc
+            complaint[l, j] = newc
+            last_cum[l, j] = cum
+
+        # (5) QUACK bookkeeping
+        for l in range(n_s):
+            qk = quacked_at(l)
+            newly = qk & (quack_time[l] < 0)
+            quack_time[l, newly] = t
+
+        cross_hist.append(len(wire))
+        intra_hist.append(intra)
+        resend_hist.append(len(resends))
+
+    return RefResult(
+        quack_time=quack_time, deliver_time=deliver_time, retry=retry,
+        recv_has=recv_has, cross_msgs=np.array(cross_hist),
+        intra_msgs=np.array(intra_hist), resends=np.array(resend_hist))

@@ -1,0 +1,408 @@
+"""Vectorized PICSOU simulator (synchronous rounds, ``jax.lax.scan``).
+
+The simulator executes the *full* protocol of §4–§5 — round-robin / DSS
+send scheduling, receiver rotation, intra-RSM broadcast, cumulative +
+phi-list acknowledgements, QUACK formation, duplicate-complaint loss
+detection, communication-free retransmitter election, GC with the
+highest-quacked metadata defence, stake weighting and LCM-scaled
+retransmission rotation — as dense array state transitions, one scan step
+per synchronous round (one cross-RSM RTT).
+
+Semantics of a round ``t`` (matching Figure 3/4/5/6 of the paper):
+  1. intra-RSM broadcasts queued at t-1 land;
+  2. retransmissions are declared/elected from knowledge as of t-1 and the
+     corresponding resends are put on the wire;
+  3. scheduled original sends for round t are put on the wire; direct sends
+     land at their receiver (unless dropped) and queue a broadcast;
+  4. every alive receiver acks (cumulative counter + phi-list + implicit
+     duplicate-cum complaint) to its rotating target sender; senders fold
+     the ack into their knowledge; QUACK / GC state advances.
+
+The pure-python oracle in ``refsim.py`` mirrors this loop unvectorized;
+``tests/test_simulator.py`` cross-checks them step by step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import scheduler as sched
+from .quack import claim_bitmask, missing_below_horizon, weighted_quorum_prefix
+from .types import (COUNTER_BYTES, MAC_BYTES, SEQNO_BYTES, FailureScenario,
+                    NetworkModel, RSMConfig, SimConfig, lcm_scale_factors)
+
+__all__ = ["SimSpec", "SimResult", "build_spec", "run_simulation"]
+
+NEVER = jnp.int32(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimSpec:
+    """Fully-resolved, static simulation plan (hashable closure inputs)."""
+
+    n_s: int
+    n_r: int
+    m: int
+    steps: int
+    phi: int
+    quack_thresh: float      # u_r + 1 (stake units)
+    dup_thresh: float        # r_r + 1 (stake units); 1 in CFT mode
+    hq_thresh: float         # r_s + 1 (stake units)
+    stakes_s: Tuple[float, ...]
+    stakes_r: Tuple[float, ...]
+    orig_sender: Tuple[int, ...]      # (M,)
+    orig_recv: Tuple[int, ...]        # (M,)
+    orig_step: Tuple[int, ...]        # (M,) dispatch round of original send
+    rs_seq: Tuple[int, ...]           # retransmit sender rotation sequence
+    rr_seq: Tuple[int, ...]           # retransmit receiver rotation sequence
+    crash_s: Tuple[int, ...]
+    crash_r: Tuple[int, ...]
+    byz_send_drop: Tuple[bool, ...]
+    byz_recv_drop: Tuple[bool, ...]
+    byz_ack_advance: Tuple[int, ...]
+    byz_ack_low: Tuple[bool, ...]
+    byz_bcast_partial: Tuple[bool, ...]
+    bcast_limit: int
+
+
+class SimState(NamedTuple):
+    recv_has: jnp.ndarray      # (n_r, M) bool — receiver truly holds k
+    bcast_q: jnp.ndarray       # (n_r, M) bool — queued broadcast for t+1
+    bcast_done: jnp.ndarray    # (n_r, M) bool
+    known: jnp.ndarray         # (n_s, n_r, M) bool — j's claims known to l
+    complaint: jnp.ndarray     # (n_s, n_r, M) bool — j's last complaint to l
+    repeat_c: jnp.ndarray      # (n_s, n_r, M) bool — complained twice to l
+    last_cum: jnp.ndarray      # (n_s, n_r) int32
+    retry: jnp.ndarray         # (n_s, M) int32
+    quack_time: jnp.ndarray    # (n_s, M) int32, -1 = not yet
+    deliver_time: jnp.ndarray  # (M,) int32, -1 = not yet
+    hq_reports: jnp.ndarray    # (n_r, n_s) int32
+    ack_floor: jnp.ndarray     # (n_r,) int32
+
+
+class StepMetrics(NamedTuple):
+    cross_msgs: jnp.ndarray     # direct cross-RSM data copies this round
+    intra_msgs: jnp.ndarray     # broadcast copies this round
+    resends: jnp.ndarray        # retransmissions this round
+    acks: jnp.ndarray           # ack messages this round
+    delivered: jnp.ndarray      # cumulative messages delivered
+    min_quack_prefix: jnp.ndarray  # min honest-sender quacked prefix
+
+
+@dataclasses.dataclass
+class SimResult:
+    spec: SimSpec
+    metrics: "np.ndarray-like"            # StepMetrics of (T,) arrays
+    quack_time: np.ndarray                # (n_s, M)
+    deliver_time: np.ndarray              # (M,)
+    retry: np.ndarray                     # (n_s, M)
+    recv_has: np.ndarray                  # (n_r, M)
+
+    # --- derived -------------------------------------------------------
+    def completion_step(self) -> int:
+        """Round by which every message is QUACKed at every honest sender."""
+        honest = _honest_mask(self.spec.crash_s, self.spec.byz_send_drop)
+        qt = self.quack_time[honest]
+        if qt.size == 0 or (qt < 0).any():
+            return -1
+        return int(qt.max())
+
+    def delivery_step(self) -> int:
+        if (self.deliver_time < 0).any():
+            return -1
+        return int(self.deliver_time.max())
+
+    def total_cross_msgs(self) -> int:
+        return int(np.sum(self.metrics.cross_msgs))
+
+    def total_intra_msgs(self) -> int:
+        return int(np.sum(self.metrics.intra_msgs))
+
+    def total_resends(self) -> int:
+        return int(np.sum(self.metrics.resends))
+
+    def max_resends_per_msg(self) -> int:
+        honest = _honest_mask(self.spec.crash_s, self.spec.byz_send_drop)
+        if not honest.any():
+            return 0
+        return int(self.retry[honest].max())
+
+
+def _honest_mask(crash, byz_flags) -> np.ndarray:
+    crash = np.asarray(crash)
+    byz = np.asarray(byz_flags)
+    return (crash < 0) & ~byz
+
+
+def build_spec(sender: RSMConfig, receiver: RSMConfig,
+               sim: SimConfig = SimConfig(),
+               failures: FailureScenario = FailureScenario.none(),
+               use_lcm_scaling: bool = True) -> SimSpec:
+    """Resolve schedules + failure masks into a static SimSpec."""
+    n_s, n_r, m = sender.n, receiver.n, sim.n_msgs
+    st_s = np.asarray(sender.stakes, dtype=np.float64)
+    st_r = np.asarray(receiver.stakes, dtype=np.float64)
+
+    orig_sender = sched.sender_assignment(
+        sim.scheduler, st_s, m, quantum=sim.quantum, seed=sim.seed)
+    orig_recv = sched.receiver_for(
+        orig_sender, n_r, recv_stakes=st_r, scheduler=sim.scheduler,
+        quantum=sim.quantum, seed=sim.seed + 1)
+
+    # dispatch round of each original send: the i-th message of sender l is
+    # sent in round i // window (window sends per sender per round).
+    orig_step = np.zeros(m, dtype=np.int64)
+    counters = np.zeros(n_s, dtype=np.int64)
+    for k in range(m):
+        l = orig_sender[k]
+        orig_step[k] = counters[l] // max(sim.window, 1)
+        counters[l] += 1
+
+    # retransmission rotation sequences (§4.2 unit-stake, §5.3 staked+LCM).
+    unit_s = np.allclose(st_s, st_s[0])
+    unit_r = np.allclose(st_r, st_r[0])
+    if unit_s and unit_r:
+        rs_seq = np.arange(n_s, dtype=np.int64)
+        rr_seq = np.arange(n_r, dtype=np.int64)
+    else:
+        psi_s, psi_r = (lcm_scale_factors(st_s.sum(), st_r.sum())
+                        if use_lcm_scaling else (1.0, 1.0))
+        # quota each replica proportional to (scaled) stake, smoothed.
+        q_s = max(n_s, min(4 * n_s, int(np.ceil(st_s.sum() * psi_s
+                                                / max(st_s.min() * psi_s, 1)))))
+        q_r = max(n_r, min(4 * n_r, int(np.ceil(st_r.sum() * psi_r
+                                                / max(st_r.min() * psi_r, 1)))))
+        rs_seq = sched.dss_sequence(st_s * psi_s, q_s, q_s)
+        rr_seq = sched.dss_sequence(st_r * psi_r, q_r, q_r)
+
+    def tup(x, n, default):
+        if x is None:
+            return tuple([default] * n)
+        return tuple(x)
+
+    return SimSpec(
+        n_s=n_s, n_r=n_r, m=m, steps=sim.steps, phi=sim.phi,
+        quack_thresh=receiver.quack_threshold,
+        dup_thresh=receiver.dup_threshold,
+        hq_thresh=max(sender.r + 1, 1),
+        stakes_s=tuple(float(x) for x in st_s),
+        stakes_r=tuple(float(x) for x in st_r),
+        orig_sender=tuple(int(x) for x in orig_sender),
+        orig_recv=tuple(int(x) for x in orig_recv),
+        orig_step=tuple(int(x) for x in orig_step),
+        rs_seq=tuple(int(x) for x in rs_seq),
+        rr_seq=tuple(int(x) for x in rr_seq),
+        crash_s=tup(failures.crash_s, n_s, -1),
+        crash_r=tup(failures.crash_r, n_r, -1),
+        byz_send_drop=tup(failures.byz_send_drop, n_s, False),
+        byz_recv_drop=tup(failures.byz_recv_drop, n_r, False),
+        byz_ack_advance=tup(failures.byz_ack_advance, n_r, 0),
+        byz_ack_low=tup(failures.byz_ack_low, n_r, False),
+        byz_bcast_partial=tup(failures.byz_bcast_partial, n_r, False),
+        bcast_limit=failures.bcast_limit,
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_sim(spec: SimSpec):
+    """Build + jit the scan for a spec (cached: specs are hashable)."""
+    n_s, n_r, m = spec.n_s, spec.n_r, spec.m
+    phi = spec.phi
+
+    stakes_s = jnp.asarray(spec.stakes_s, dtype=jnp.float32)
+    stakes_r = jnp.asarray(spec.stakes_r, dtype=jnp.float32)
+    orig_sender = jnp.asarray(spec.orig_sender, dtype=jnp.int32)
+    orig_recv = jnp.asarray(spec.orig_recv, dtype=jnp.int32)
+    orig_step = jnp.asarray(spec.orig_step, dtype=jnp.int32)
+    rs_seq = jnp.asarray(spec.rs_seq, dtype=jnp.int32)
+    rr_seq = jnp.asarray(spec.rr_seq, dtype=jnp.int32)
+    crash_s = jnp.asarray(spec.crash_s, dtype=jnp.int32)
+    crash_r = jnp.asarray(spec.crash_r, dtype=jnp.int32)
+    byz_send_drop = jnp.asarray(spec.byz_send_drop, dtype=bool)
+    byz_recv_drop = jnp.asarray(spec.byz_recv_drop, dtype=bool)
+    byz_ack_advance = jnp.asarray(spec.byz_ack_advance, dtype=jnp.int32)
+    byz_ack_low = jnp.asarray(spec.byz_ack_low, dtype=bool)
+    byz_bcast_partial = jnp.asarray(spec.byz_bcast_partial, dtype=bool)
+
+    idx_m = jnp.arange(m, dtype=jnp.int32)
+    idx_r = jnp.arange(n_r, dtype=jnp.int32)
+    idx_s = jnp.arange(n_s, dtype=jnp.int32)
+    honest_r = (crash_r < 0) & ~(byz_recv_drop | byz_ack_low
+                                 | (byz_ack_advance > 0) | byz_bcast_partial)
+    honest_s = (crash_s < 0) & ~byz_send_drop
+    ls, lr = len(spec.rs_seq), len(spec.rr_seq)
+
+    # broadcast reach matrix (n_r, n_r): who hears j's intra-RSM broadcast.
+    reach = np.ones((n_r, n_r), dtype=bool)
+    for j in range(n_r):
+        if spec.byz_bcast_partial[j]:
+            reach[j, :] = False
+            reach[j, :max(spec.bcast_limit, 0)] = True
+        reach[j, j] = False
+    reach = jnp.asarray(reach)
+
+    def step(state: SimState, t: jnp.ndarray):
+        alive_s = (crash_s < 0) | (t < crash_s)
+        alive_r = (crash_r < 0) | (t < crash_r)
+
+        # (1) broadcasts queued last round land now ------------------------
+        bcast_sent = state.bcast_q & alive_r[:, None]
+        recv_from_bcast = jnp.einsum("jk,ji->ik", bcast_sent, reach) > 0
+        recv_has = state.recv_has | (recv_from_bcast & alive_r[:, None])
+        bcast_done = state.bcast_done | bcast_sent
+
+        # (2) retransmission declaration + election (knowledge of t-1) -----
+        w_complaints = jnp.einsum("ljm,j->lm",
+                                  state.repeat_c.astype(jnp.float32), stakes_r)
+        quacked_msg_prev = (jnp.einsum("ljm,j->lm",
+                                       state.known.astype(jnp.float32),
+                                       stakes_r) >= spec.quack_thresh)
+        declared = ((w_complaints >= spec.dup_thresh)
+                    & ~quacked_msg_prev
+                    & (orig_step[None, :] < t))
+        retry_new = state.retry + declared.astype(jnp.int32)
+        # Fig. 6: the a-th retransmission of k is sent by the a-th successor
+        # of the original sender: sender_new = (orig + #retransmit) mod n_s.
+        elected = rs_seq[(idx_m[None, :] + retry_new) % ls] == idx_s[:, None]
+        resend = declared & elected & alive_s[:, None] & ~byz_send_drop[:, None]
+        # clear complaint trackers where a loss was declared (fresh cycle)
+        complaint = jnp.where(declared[:, None, :], False, state.complaint)
+        repeat_c = jnp.where(declared[:, None, :], False, state.repeat_c)
+        re_target = rr_seq[(orig_recv[None, :] + retry_new) % lr]  # (n_s, M)
+
+        # (3) original sends + landing --------------------------------------
+        orig_ok = ((orig_step == t) & alive_s[orig_sender]
+                   & ~byz_send_drop[orig_sender])
+        s_orig = orig_ok[None, :] & (orig_recv[None, :] == idx_r[:, None])
+        s_re = (jnp.einsum("lm,lim->im", resend.astype(jnp.int32),
+                           (re_target[:, None, :] == idx_r[None, :, None])
+                           .astype(jnp.int32)) > 0)
+        wire = s_orig | s_re                                   # (n_r, M)
+        land = wire & alive_r[:, None] & ~byz_recv_drop[:, None]
+        recv_has = recv_has | land
+        bcast_q = land & ~bcast_done
+        deliver_now = (recv_has & honest_r[:, None]).any(axis=0)
+        deliver_time = jnp.where((state.deliver_time < 0) & deliver_now,
+                                 t, state.deliver_time)
+
+        # (3b) highest-quacked metadata rides on every landed data message:
+        # a sender's current quacked prefix reaches every receiver it sent
+        # anything to this round (constant-size piggyback, §4.3).
+        qp_prev = jnp.sum(jnp.cumprod(quacked_msg_prev.astype(jnp.int32),
+                                      axis=1), axis=1)        # (n_s,)
+        e_lk = ((orig_sender[None, :] == idx_s[:, None])
+                & orig_ok[None, :])                            # (n_s, M)
+        sent_orig_to = jnp.einsum("lk,ik->li", e_lk.astype(jnp.int32),
+                                  s_orig.astype(jnp.int32)) > 0
+        sent_re_to = jnp.einsum(
+            "lm,lim->li", resend.astype(jnp.int32),
+            (re_target[:, None, :] == idx_r[None, :, None]).astype(jnp.int32)
+        ) > 0
+        heard = (sent_orig_to | sent_re_to).T                  # (n_r, n_s)
+        hq_new = jnp.where(heard & alive_r[:, None], qp_prev[None, :], 0)
+        hq_reports = jnp.maximum(state.hq_reports, hq_new)
+
+        # (4) acknowledgements ---------------------------------------------
+        ack_floor = weighted_quorum_prefix(hq_reports, stakes_s,
+                                           spec.hq_thresh)
+        ack_floor = jnp.maximum(state.ack_floor, ack_floor)
+        eff = recv_has | (idx_m[None, :] < ack_floor[:, None])
+        cum, claim, _known_mask = claim_bitmask(eff, phi)
+        miss = missing_below_horizon(eff, phi)
+        # Byzantine lies --------------------------------------------------
+        cum = jnp.where(byz_ack_low, 0, cum)
+        cum = jnp.where(byz_ack_advance > 0,
+                        jnp.minimum(cum + byz_ack_advance, m), cum)
+        claim = jnp.where(byz_ack_low[:, None], False, claim)
+        claim = jnp.where((byz_ack_advance > 0)[:, None],
+                          idx_m[None, :] < cum[:, None], claim)
+        miss = jnp.where(byz_ack_low[:, None], idx_m[None, :] < phi, miss)
+        miss = jnp.where((byz_ack_advance > 0)[:, None], False, miss)
+        # implicit duplicate-cum complaint: cum unchanged since last ack to
+        # the same sender => complain about index cum (if it exists).
+        tgt = (idx_r + t) % n_s                                  # (n_r,)
+        upd = (tgt[None, :] == idx_s[:, None]) & alive_r[None, :]  # (n_s,n_r)
+        dup_cum = (state.last_cum == cum[None, :])               # (n_s, n_r)
+        dup_complaint = (dup_cum[:, :, None]
+                         & (idx_m[None, None, :] == cum[None, :, None])
+                         & (cum[None, :, None] < m))
+        new_complaint = miss[None, :, :] | dup_complaint         # (n_s,n_r,M)
+        known = state.known | (upd[:, :, None] & claim[None, :, :])
+        repeat_c = jnp.where(upd[:, :, None],
+                             repeat_c | (complaint & new_complaint), repeat_c)
+        complaint = jnp.where(upd[:, :, None], new_complaint, complaint)
+        last_cum = jnp.where(upd, cum[None, :], state.last_cum)
+
+        # (5) QUACK bookkeeping --------------------------------------------
+        quacked_msg = (jnp.einsum("ljm,j->lm", known.astype(jnp.float32),
+                                  stakes_r) >= spec.quack_thresh)
+        quack_time = jnp.where((state.quack_time < 0) & quacked_msg,
+                               t, state.quack_time)
+
+        new_state = SimState(
+            recv_has=recv_has, bcast_q=bcast_q, bcast_done=bcast_done,
+            known=known, complaint=complaint, repeat_c=repeat_c,
+            last_cum=last_cum, retry=retry_new, quack_time=quack_time,
+            deliver_time=deliver_time, hq_reports=hq_reports,
+            ack_floor=ack_floor)
+
+        qp = jnp.sum(jnp.cumprod(quacked_msg.astype(jnp.int32), axis=1),
+                     axis=1)
+        min_qp = jnp.min(jnp.where(honest_s, qp, jnp.int32(2 ** 30)))
+        metrics = StepMetrics(
+            cross_msgs=(orig_ok.sum() + resend.sum()).astype(jnp.int32),
+            intra_msgs=jnp.einsum("jk,j->", bcast_sent.astype(jnp.int32),
+                                  reach.sum(axis=1).astype(jnp.int32)
+                                  ).astype(jnp.int32),
+            resends=resend.sum().astype(jnp.int32),
+            acks=alive_r.sum().astype(jnp.int32),
+            delivered=(deliver_time >= 0).sum().astype(jnp.int32),
+            min_quack_prefix=min_qp.astype(jnp.int32),
+        )
+        return new_state, metrics
+
+    def init_state() -> SimState:
+        f, b = jnp.zeros, jnp.full
+        return SimState(
+            recv_has=f((n_r, m), dtype=bool),
+            bcast_q=f((n_r, m), dtype=bool),
+            bcast_done=f((n_r, m), dtype=bool),
+            known=f((n_s, n_r, m), dtype=bool),
+            complaint=f((n_s, n_r, m), dtype=bool),
+            repeat_c=f((n_s, n_r, m), dtype=bool),
+            last_cum=b((n_s, n_r), -1, dtype=jnp.int32),
+            retry=f((n_s, m), dtype=jnp.int32),
+            quack_time=b((n_s, m), -1, dtype=jnp.int32),
+            deliver_time=b((m,), -1, dtype=jnp.int32),
+            hq_reports=f((n_r, n_s), dtype=jnp.int32),
+            ack_floor=f((n_r,), dtype=jnp.int32),
+        )
+
+    @jax.jit
+    def run():
+        state0 = init_state()
+        ts = jnp.arange(spec.steps, dtype=jnp.int32)
+        final, ms = jax.lax.scan(step, state0, ts)
+        return final, ms
+
+    return run
+
+
+def run_simulation(spec: SimSpec) -> SimResult:
+    final, ms = _compiled_sim(spec)()
+    final = jax.tree_util.tree_map(np.asarray, final)
+    ms = jax.tree_util.tree_map(np.asarray, ms)
+    return SimResult(
+        spec=spec,
+        metrics=StepMetrics(*ms),
+        quack_time=final.quack_time,
+        deliver_time=final.deliver_time,
+        retry=final.retry,
+        recv_has=final.recv_has,
+    )

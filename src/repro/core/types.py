@@ -1,0 +1,223 @@
+"""Core configuration types for the PICSOU / C3B protocol implementation.
+
+The paper's system model (§2.1) is the UpRight failure model: each RSM has
+``n`` replicas, is *live* despite up to ``u`` failures of any kind and *safe*
+despite up to ``r`` commission (Byzantine) failures, with ``n = 2u + r + 1``.
+``u = r = f`` gives the classic 3f+1 BFT setting; ``r = 0`` gives 2f+1 CFT.
+
+Stake-based RSMs (§5) generalize this: each replica ``j`` holds stake
+``delta_j``; thresholds ``u`` / ``r`` are stake amounts instead of counts.
+Traditional RSMs set every stake to 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "RSMConfig",
+    "NetworkModel",
+    "FailureScenario",
+    "SimConfig",
+    "COUNTER_BYTES",
+    "SEQNO_BYTES",
+    "MAC_BYTES",
+]
+
+# Wire-format constants (metadata accounting, §3 P1: constant-size metadata).
+COUNTER_BYTES = 8   # one cumulative-ack counter
+SEQNO_BYTES = 8     # one sequence number (phi-list entry / piggybacked hq)
+MAC_BYTES = 32      # per-message MAC when r > 0 (BFT configurations)
+
+
+@dataclasses.dataclass(frozen=True)
+class RSMConfig:
+    """One replicated state machine, in the UpRight model.
+
+    n:      replica count.
+    u:      liveness threshold (stake units; replica count when unit stakes).
+    r:      safety/commission threshold (stake units). r == 0 => CFT.
+    stakes: per-replica stake (defaults to all-ones). Total stake is the
+            paper's ``n_i`` in the weighted setting (§5).
+    """
+
+    n: int
+    u: int
+    r: int
+    stakes: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if self.stakes is None:
+            object.__setattr__(self, "stakes", tuple([1.0] * self.n))
+        if len(self.stakes) != self.n:
+            raise ValueError(f"stakes len {len(self.stakes)} != n {self.n}")
+        if self.n <= 0:
+            raise ValueError("n must be positive")
+        if self.u < 0 or self.r < 0:
+            raise ValueError("u, r must be non-negative")
+
+    @classmethod
+    def bft(cls, f: int, stakes: Optional[Sequence[float]] = None) -> "RSMConfig":
+        """3f+1 BFT RSM (u = r = f)."""
+        return cls(n=3 * f + 1, u=f, r=f,
+                   stakes=tuple(stakes) if stakes is not None else None)
+
+    @classmethod
+    def cft(cls, f: int, stakes: Optional[Sequence[float]] = None) -> "RSMConfig":
+        """2f+1 CFT RSM (u = f, r = 0)."""
+        return cls(n=2 * f + 1, u=f, r=0,
+                   stakes=tuple(stakes) if stakes is not None else None)
+
+    @property
+    def total_stake(self) -> float:
+        return float(sum(self.stakes))
+
+    @property
+    def quack_threshold(self) -> float:
+        """Stake that must acknowledge before a QUACK forms: u + 1 (§4.1)."""
+        return self.u + 1
+
+    @property
+    def dup_threshold(self) -> float:
+        """Duplicate-QUACK size proving loss: r + 1, or 1 for CFT (§4.2)."""
+        return max(self.r + 1, 1)
+
+    def stake_array(self) -> np.ndarray:
+        return np.asarray(self.stakes, dtype=np.float64)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    """Analytic link model used by the simulator and the capacity analysis.
+
+    The paper's testbed (§6): c2-standard-8 VMs; geo experiments cap each
+    *pairwise cross-RSM connection* at 135 Mbit/s with 163 ms ping. We model:
+
+    msg_bytes:       application message size (paper sweeps 0.1 kB .. 1 MB).
+    nic_gbps:        per-node NIC bandwidth (full duplex), Gbit/s.
+    intra_gbps:      per-pair intra-RSM bandwidth, Gbit/s.
+    cross_gbps:      per-pair cross-RSM bandwidth, Gbit/s (135 Mb/s geo).
+    rtt_s:           cross-RSM round-trip, seconds (one simulator step).
+    phi:             phi-list bound (§4.2 parallel cumulative acks).
+    """
+
+    msg_bytes: float = 1e6
+    nic_gbps: float = 10.0
+    intra_gbps: float = 10.0
+    cross_gbps: float = 10.0
+    rtt_s: float = 0.001
+    phi: int = 1000
+
+    @property
+    def nic_Bps(self) -> float:
+        return self.nic_gbps * 1e9 / 8.0
+
+    @property
+    def intra_Bps(self) -> float:
+        return self.intra_gbps * 1e9 / 8.0
+
+    @property
+    def cross_Bps(self) -> float:
+        return self.cross_gbps * 1e9 / 8.0
+
+    def ack_meta_bytes(self, n_missing: int = 0, bft: bool = True) -> float:
+        """Ack = 1 cumulative counter + phi-list entries (+ MAC when BFT)."""
+        b = COUNTER_BYTES + SEQNO_BYTES * min(n_missing, self.phi)
+        return b + (MAC_BYTES if bft else 0)
+
+    @classmethod
+    def geo(cls, msg_bytes: float = 1e6) -> "NetworkModel":
+        """Paper's Iowa <-> Hong Kong setup (§6.1 geo-replication)."""
+        return cls(msg_bytes=msg_bytes, nic_gbps=10.0, intra_gbps=10.0,
+                   cross_gbps=0.135, rtt_s=0.163)
+
+    @classmethod
+    def lan(cls, msg_bytes: float = 1e6) -> "NetworkModel":
+        return cls(msg_bytes=msg_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureScenario:
+    """Which replicas misbehave and how.
+
+    crash_s / crash_r:        step at which each sender/receiver replica
+                              crashes (never sends/acks/broadcasts after);
+                              -1 => never. Shape (n_s,) / (n_r,).
+    byz_send_drop:            sender silently never originates its messages
+                              (commission failure; still acks on the mirror
+                              direction).  Shape (n_s,) bool.
+    byz_recv_drop:            receiver drops direct cross-RSM messages (does
+                              not store/bcast/ack them). Shape (n_r,) bool.
+    byz_ack_advance:          receiver lies: acks +adv beyond truth. (n_r,) int.
+    byz_ack_low:              receiver lies: always acks 0. (n_r,) bool.
+    byz_bcast_partial:        receiver broadcasts only to the first
+                              ``bcast_limit`` replicas (the §4.3 GC-stall
+                              attack). (n_r,) bool.
+    bcast_limit:              number of replicas a partial broadcaster reaches.
+    """
+
+    crash_s: Optional[Tuple[int, ...]] = None
+    crash_r: Optional[Tuple[int, ...]] = None
+    byz_send_drop: Optional[Tuple[bool, ...]] = None
+    byz_recv_drop: Optional[Tuple[bool, ...]] = None
+    byz_ack_advance: Optional[Tuple[int, ...]] = None
+    byz_ack_low: Optional[Tuple[bool, ...]] = None
+    byz_bcast_partial: Optional[Tuple[bool, ...]] = None
+    bcast_limit: int = 0
+
+    @classmethod
+    def none(cls) -> "FailureScenario":
+        return cls()
+
+    @classmethod
+    def crash_fraction(cls, n_s: int, n_r: int, frac: float,
+                       seed: int = 0, at_step: int = 0) -> "FailureScenario":
+        """Paper §6.2: randomly fail ``frac`` of replicas (they send nothing)."""
+        rng = np.random.RandomState(seed)
+        ks = max(0, min(int(round(frac * n_s)), n_s - 1))
+        kr = max(0, min(int(round(frac * n_r)), n_r - 1))
+        cs = np.full(n_s, -1, dtype=np.int64)
+        cr = np.full(n_r, -1, dtype=np.int64)
+        cs[rng.choice(n_s, size=ks, replace=False)] = at_step
+        cr[rng.choice(n_r, size=kr, replace=False)] = at_step
+        return cls(crash_s=tuple(int(x) for x in cs),
+                   crash_r=tuple(int(x) for x in cr))
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Static shape / schedule parameters for one simulation run.
+
+    n_msgs:          number of messages M transmitted by the sender RSM.
+    steps:           number of synchronous rounds T to simulate.
+    window:          max new originations per sender per step (TCP window).
+    scheduler:       'round_robin' | 'dss' | 'skewed_rr' | 'lottery' (§5.2).
+    quantum:         DSS message quantum q (messages per scheduling quantum).
+    phi:             phi-list bound (selective-repeat width, §4.2).
+    seed:            PRNG seed (lottery scheduler only).
+    """
+
+    n_msgs: int = 256
+    steps: int = 200
+    window: int = 4
+    scheduler: str = "round_robin"
+    quantum: int = 64
+    phi: int = 32
+    seed: int = 0
+
+
+def lcm_scale_factors(total_s: float, total_r: float) -> Tuple[float, float]:
+    """§5.3 LCM stake rescaling: psi_s = LCM/delta_s, psi_r = LCM/delta_r.
+
+    Stakes may be non-integer; we rescale via the LCM of the integerized
+    totals (the paper assumes integral stake).
+    """
+    ts, tr = int(round(total_s)), int(round(total_r))
+    if ts <= 0 or tr <= 0:
+        raise ValueError("total stakes must be positive")
+    l = math.lcm(ts, tr)
+    return l / ts, l / tr

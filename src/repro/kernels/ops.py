@@ -1,0 +1,26 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel
+body runs in Python via the Pallas interpreter — bit-faithful to the TPU
+algorithm); on a real TPU set ``interpret=False`` (ModelConfig.use_pallas
+flips the model's attention/rwkv paths onto these wrappers).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention
+from .quack_scan import quack_scan
+from .rwkv6_scan import rwkv6_chunked
+
+__all__ = ["flash_attention", "rwkv6_chunked", "quack_scan",
+           "on_tpu", "default_interpret"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    return not on_tpu()

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mha_reference", "rwkv6_reference", "quack_reference"]
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,H,Sq,D); k,v: (B,KV,Skv,D); GQA via head folding.
+
+    Returns (B,H,Sq,D). Positions are aligned at the END (q token i sits at
+    absolute position Skv - Sq + i), matching prefill-with-cache."""
+    b, h, sq, d = q.shape
+    _, n_kv, skv, _ = k.shape
+    g = h // n_kv
+    qr = q.reshape(b, n_kv, g, sq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qr, kf) / math.sqrt(d)
+    q_pos = (skv - sq) + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def rwkv6_reference(r, k, v, w, u, state=None):
+    """RWKV6 (Finch) recurrence, sequential oracle.
+
+    r,k,v,w: (B,H,T,D) — w is the per-step decay in (0,1);
+    u: (H,D) bonus. Returns (y: (B,H,T,D) f32, final_state: (B,H,D,D)).
+
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T
+      y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    """
+    b, h, t, d = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, d, d), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt,
+                        S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, yt
+
+    xs = tuple(x.transpose(2, 0, 1, 3).astype(jnp.float32)
+               for x in (r, k, v, w))
+    final, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return ys.transpose(1, 2, 0, 3), final
+
+
+def quack_reference(claims, complaints, stakes, quack_thresh, dup_thresh):
+    """QUACK aggregation oracle.
+
+    claims:     (S, R, W) bool — receiver r claims message w (to sender s)
+    complaints: (S, R, W) bool — repeat complaints
+    stakes:     (R,) f32
+    Returns (quacked (S,W) bool, lost (S,W) bool, prefix (S,) int32).
+    """
+    w_claim = jnp.einsum("srw,r->sw", claims.astype(jnp.float32), stakes)
+    w_comp = jnp.einsum("srw,r->sw", complaints.astype(jnp.float32), stakes)
+    quacked = w_claim >= quack_thresh
+    lost = (w_comp >= dup_thresh) & ~quacked
+    prefix = jnp.cumprod(quacked.astype(jnp.int32), axis=1).sum(axis=1)
+    return quacked, lost, prefix.astype(jnp.int32)

@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count on first init) — which is why this module sets XLA_FLAGS at the very
+top and why nothing else in the package sets it globally.
+
+For every cell we:
+  1. build the step function (train_step / prefill / serve_step),
+  2. resolve in/out shardings from the logical rules,
+  3. ``.lower().compile()`` against ShapeDtypeStructs (no allocation),
+  4. print ``compiled.memory_analysis()`` (proves it fits) and
+     ``compiled.cost_analysis()`` (FLOPs/bytes for the roofline),
+  5. parse collective wire bytes from the optimized HLO,
+  6. append one JSON record to the results file.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch all
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --arch qwen2-72b \
+      --shape train_4k --impl triangular
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+
+def apply_opts(cfg, opts: str):
+    """Apply §Perf levers: 'moe2d', 'rwkvblock=16', 'noremat'."""
+    import dataclasses
+    for opt in filter(None, (opts or "").split(",")):
+        if opt == "moe2d":
+            cfg = dataclasses.replace(cfg, moe_dispatch_2d=True)
+        elif opt.startswith("rwkvblock="):
+            cfg = dataclasses.replace(cfg,
+                                      rwkv_scan_block=int(opt.split("=")[1]))
+        elif opt == "noremat":
+            cfg = dataclasses.replace(cfg, remat=False)
+        elif opt == "rematdots":
+            cfg = dataclasses.replace(cfg, remat_policy="dots")
+        elif opt == "moedense":
+            cfg = dataclasses.replace(cfg, moe_impl="dense")
+        else:
+            raise ValueError(f"unknown opt {opt!r}")
+    return cfg
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             impl=None, out_path=None, verbose=True, extra_tag="",
+             opts: str = ""):
+    from ..configs import SHAPES, get_config, shape_applicable
+    from ..roofline import analyze_compiled
+    from . import steps as S
+    from .mesh import make_production_mesh
+
+    cfg = apply_opts(get_config(arch), opts)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "impl": impl or "scan", "tag": extra_tag}
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        _emit(rec, out_path, verbose)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    t0 = time.time()
+    try:
+        with mesh:
+            bundle = S.build_step(cfg, mesh, shape, impl=impl)
+            lowered = bundle.lower()
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            hlo = compiled.as_text()
+            rep = analyze_compiled(compiled, cfg, shape, mesh_kind, n_chips,
+                                   hlo_text=hlo)
+        rec.update(
+            status="OK", lower_s=round(t1 - t0, 1),
+            compile_s=round(t2 - t1, 1),
+            hlo_flops_per_chip=rep.hlo_flops_per_chip,
+            hlo_bytes_per_chip=rep.hlo_bytes_per_chip,
+            wire_bytes_per_chip=rep.wire_bytes_per_chip,
+            model_flops_total=rep.model_flops_total,
+            compute_s=rep.compute_s, memory_s=rep.memory_s,
+            collective_s=rep.collective_s, bottleneck=rep.bottleneck,
+            useful_ratio=rep.useful_ratio,
+            collectives={k: v for k, v in rep.collective_breakdown.items()
+                         if v},
+            memory_analysis=rep.memory_analysis[:2000],
+        )
+        if verbose:
+            print(f"--- {arch} x {shape_name} x {mesh_kind} "
+                  f"({rec['impl']}) ---")
+            print("memory_analysis:", rep.memory_analysis[:400])
+            print(f"cost: flops/chip={rep.hlo_flops_per_chip:.3e} "
+                  f"bytes/chip={rep.hlo_bytes_per_chip:.3e} "
+                  f"wire/chip={rep.wire_bytes_per_chip:.3e}")
+            print(f"roofline: compute={rep.compute_s:.4f}s "
+                  f"memory={rep.memory_s:.4f}s "
+                  f"collective={rep.collective_s:.4f}s "
+                  f"-> {rep.bottleneck}-bound "
+                  f"(useful={rep.useful_ratio:.2f})")
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"--- {arch} x {shape_name} x {mesh_kind} FAILED: {e}")
+    _emit(rec, out_path, verbose=False)
+    return rec
+
+
+def _emit(rec, out_path, verbose):
+    if verbose:
+        print(json.dumps({k: v for k, v in rec.items()
+                          if k not in ("memory_analysis", "trace")}))
+    if out_path:
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+def main():
+    from ..configs import SHAPES, list_configs
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--impl", default=None,
+                    choices=[None, "scan", "triangular"])
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--opt", default="",
+                    help="comma list: moe2d, rwkvblock=N, noremat")
+    args = ap.parse_args()
+
+    archs = list_configs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("OK", "SKIP"):
+                        done.add((r["arch"], r["shape"], r["mesh"],
+                                  r.get("impl", "scan"), r.get("tag", "")))
+                except json.JSONDecodeError:
+                    pass
+
+    n_fail = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, mesh_kind, args.impl or "scan", args.tag)
+                if key in done:
+                    print(f"skip (cached): {key}")
+                    continue
+                rec = run_cell(arch, shape, mesh_kind, impl=args.impl,
+                               out_path=args.out, extra_tag=args.tag,
+                               opts=args.opt)
+                n_fail += rec["status"] == "FAIL"
+    print(f"dry-run complete; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

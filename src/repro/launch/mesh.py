@@ -1,0 +1,44 @@
+"""Production mesh factory.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod: 16x16 = 256 chips, axes
+(data, model). Multi-pod: 2x16x16 = 512 chips, axes (pod, data, model) —
+the 'pod' axis crosses the slow inter-pod links and is where the PICSOU
+cross-pod schedule applies (see repro.crosspod).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_mesh", "small_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — the dry-run entry "
+            "point must set XLA_FLAGS=--xla_force_host_platform_device_"
+            "count before any jax import")
+    dev = np.asarray(devices[:n]).reshape(tuple(shape))
+    return Mesh(dev, tuple(axes))
+
+
+def small_mesh(data: int = 2, model: int = 2,
+               pod: Optional[int] = None) -> Mesh:
+    """Reduced mesh for CPU tests (requires >= data*model*pod devices)."""
+    if pod:
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,164 @@
+"""Step builders: jitted train/prefill/decode steps with explicit shardings.
+
+Everything here works from ShapeDtypeStructs, so the dry-run can lower and
+compile each (arch x shape x mesh) cell without allocating a single real
+tensor; the same builders drive the real CPU training example with
+materialized params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models import model as M
+from ..models.sharding import (DEFAULT_RULES, activation_sharding,
+                               sharding_for, spec_for)
+from ..optim import (AdamWConfig, adamw_init, adamw_update, cosine_schedule,
+                     opt_state_specs)
+
+__all__ = ["rules_for", "param_shardings", "build_train_step",
+           "build_prefill_step", "build_decode_step", "StepBundle"]
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh) -> Dict[str, Any]:
+    """Divisibility-aware rule selection (see DESIGN.md §4).
+
+    When KV heads cannot shard over 'model' (e.g. qwen2 kv=8 on a 16-way
+    axis) the KV-cache sequence axis takes the sharding instead.
+    """
+    rules = dict(DEFAULT_RULES)
+    model_size = mesh.shape.get("model", 1)
+    if model_size > 1 and cfg.n_kv_heads % model_size != 0:
+        rules["cache_seq"] = "model"
+    return rules
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules=None):
+    shapes, names = M.param_specs(cfg)
+    rules = rules or rules_for(cfg, mesh)
+    return jax.tree_util.tree_map(
+        lambda s, n: sharding_for(mesh, n, s.shape, rules),
+        shapes, names,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)), shapes
+
+
+def _shardings_from(mesh, shapes, names, rules):
+    return jax.tree_util.tree_map(
+        lambda s, n: sharding_for(mesh, n, s.shape, rules),
+        shapes, names,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """A jittable step with its sharded input/output declarations."""
+
+    fn: Any                     # the jitted function
+    in_shapes: Tuple[Any, ...]  # ShapeDtypeStruct trees (lower(*in_shapes))
+    in_shardings: Tuple[Any, ...]
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict[str, Any]] = None
+
+    def lower(self):
+        with activation_sharding(self.mesh, self.rules):
+            return self.fn.lower(*self.in_shapes)
+
+    def __call__(self, *args):
+        with activation_sharding(self.mesh, self.rules):
+            return self.fn(*args)
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh,
+                     shape: ShapeSpec,
+                     opt_cfg: AdamWConfig = AdamWConfig(),
+                     impl: Optional[str] = None,
+                     warmup: int = 100, total_steps: int = 10_000
+                     ) -> StepBundle:
+    rules = rules_for(cfg, mesh)
+    p_shard, p_shapes = param_shardings(cfg, mesh, rules)
+    _, p_names = M.param_specs(cfg)
+    o_shapes, o_names = opt_state_specs(p_shapes, p_names)
+    o_shard = _shardings_from(mesh, o_shapes, o_names, rules)
+    b_shapes_d, b_names = M.input_specs(cfg, shape)
+    b_shard = _shardings_from(mesh, b_shapes_d, b_names, rules)
+    rep = NamedSharding(mesh, P())
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            M.loss_fn, has_aux=True)(params, cfg, batch, impl=impl)
+        lr_scale = cosine_schedule(opt_state.step, warmup, total_steps)
+        params, opt_state = adamw_update(opt_cfg, grads, params, opt_state,
+                                         lr_scale)
+        out_metrics = {"loss": loss, **metrics}
+        return params, opt_state, out_metrics
+
+    metric_shard = {"loss": rep, "ce": rep, "aux": rep}
+    fn = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, metric_shard),
+        donate_argnums=(0, 1),
+    )
+    return StepBundle(fn=fn, in_shapes=(p_shapes, o_shapes, b_shapes_d),
+                      in_shardings=(p_shard, o_shard, b_shard),
+                      mesh=mesh, rules=rules)
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec,
+                       impl: Optional[str] = None) -> StepBundle:
+    rules = rules_for(cfg, mesh)
+    p_shard, p_shapes = param_shardings(cfg, mesh, rules)
+    b_shapes, b_names = M.input_specs(cfg, shape)
+    b_shard = _shardings_from(mesh, b_shapes, b_names, rules)
+
+    def prefill_step(params, batch):
+        memory = batch.get("frames", batch.get("memory"))
+        return M.prefill(params, cfg, batch["tokens"], memory=memory,
+                         impl=impl)
+
+    fn = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+    return StepBundle(fn=fn, in_shapes=(p_shapes, b_shapes),
+                      in_shardings=(p_shard, b_shard), mesh=mesh,
+                      rules=rules)
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh,
+                      shape: ShapeSpec) -> StepBundle:
+    rules = rules_for(cfg, mesh)
+    p_shard, p_shapes = param_shardings(cfg, mesh, rules)
+    b_shapes, b_names = M.input_specs(cfg, shape)
+    b_shard = _shardings_from(mesh, b_shapes, b_names, rules)
+
+    def serve_step(params, caches, token, pos):
+        return M.decode_step(params, cfg, caches, token, pos)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(p_shard, b_shard["caches"], b_shard["token"],
+                      b_shard["pos"]),
+        donate_argnums=(1,),
+    )
+    return StepBundle(
+        fn=fn,
+        in_shapes=(p_shapes, b_shapes["caches"], b_shapes["token"],
+                   b_shapes["pos"]),
+        in_shardings=(p_shard, b_shard["caches"], b_shard["token"],
+                      b_shard["pos"]),
+        mesh=mesh, rules=rules)
+
+
+def build_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec,
+               impl: Optional[str] = None) -> StepBundle:
+    """Dispatch on the shape kind: train_step / prefill / serve_step."""
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, impl=impl)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape, impl=impl)
+    return build_decode_step(cfg, mesh, shape)

@@ -1,0 +1,166 @@
+"""End-to-end training driver (runs for real on CPU with reduced configs).
+
+Two execution modes:
+
+* ``pjit``  — the production path: build_train_step's fully-sharded step
+  (FSDP over 'data', TP over 'model', DP over 'pod'); gradient sync is
+  GSPMD-inserted.
+* ``ddp``   — pure data-parallel with an EXPLICIT cross-pod gradient sync
+  so the PICSOU schedule is exercised end to end:
+  ``--sync picsou`` (RS -> pod-AR -> AG, one DCN copy per shard) vs
+  ``--sync ata`` (flat all-reduce). ``--compress`` adds int8 error-feedback
+  on the slow segment. Both modes produce the same losses (tested).
+
+Checkpoint/restart: --ckpt-dir enables async QUACK-replicated snapshots;
+--restore resumes from the latest committed step (the data pipeline is
+deterministic in (step, shard), so the loss curve continues exactly).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch granite-8b-smoke \
+      --steps 30 --mesh 1x2x2 --mode ddp --sync picsou --ckpt-dir /tmp/ck
+"""
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..checkpoint import CheckpointManager, restore_tree
+from ..configs import SHAPES, get_config
+from ..configs.base import ShapeSpec
+from ..crosspod import (ata_cross_pod_sync, ef_int8_compress,
+                        ef_int8_decompress, make_ef_state,
+                        picsou_cross_pod_sync)
+from ..data import SyntheticTokens
+from ..models import init_model, loss_fn
+from ..optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from .mesh import make_mesh
+from .steps import build_train_step
+
+
+def parse_mesh(s: str):
+    dims = [int(x) for x in s.split("x")]
+    if len(dims) == 3:
+        return make_mesh(dims, ("pod", "data", "model"))
+    return make_mesh(dims, ("data", "model"))
+
+
+def run(args):
+    cfg = get_config(args.arch)
+    mesh = parse_mesh(args.mesh)
+    shape = ShapeSpec("train", args.seq, args.batch, "train")
+    data = SyntheticTokens(vocab=cfg.vocab, seq_len=args.seq,
+                           global_batch=args.batch, seed=17)
+    rng = jax.random.PRNGKey(args.seed)
+
+    params = init_model(cfg, rng)
+    opt = adamw_init(params)
+    start_step = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, n_shards=4)
+        if args.restore:
+            (params, opt), start_step = restore_tree((params, opt),
+                                                     args.ckpt_dir)
+            start_step += 1
+            print(f"restored checkpoint, resuming at step {start_step}")
+
+    opt_cfg = AdamWConfig(lr=args.lr)
+    if args.mode == "pjit":
+        bundle = build_train_step(cfg, mesh, shape, opt_cfg=opt_cfg)
+        step_fn = bundle
+        params = jax.device_put(params, bundle.in_shardings[0])
+        opt = jax.device_put(opt, bundle.in_shardings[1])
+
+        def one_step(params, opt, batch):
+            batch = jax.device_put(batch, bundle.in_shardings[2])
+            return step_fn(params, opt, batch)
+    else:
+        ocfg = opt_cfg
+        rep = NamedSharding(mesh, P())
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        bsh = {"tokens": NamedSharding(mesh, P(batch_axes, None))}
+        sync = (picsou_cross_pod_sync if args.sync == "picsou"
+                else ata_cross_pod_sync)
+        bspec = P(batch_axes, None)
+
+        @jax.jit
+        def ddp_step(params, opt, batch, ef):
+            def local_loss(p, b):
+                return loss_fn(p, cfg, b)
+            (loss, metrics), grads = jax.value_and_grad(
+                local_loss, has_aux=True)(params, batch)
+            if args.compress and "pod" in mesh.shape:
+                flat, treedef = jax.tree_util.tree_flatten(grads)
+                ef_flat = treedef.flatten_up_to(ef)
+                outs, new_ef = [], []
+                for g, e in zip(flat, ef_flat):
+                    packed, ne = ef_int8_compress(g, e)
+                    outs.append(ef_int8_decompress(packed, g.shape)
+                                .astype(g.dtype))
+                    new_ef.append(ne)
+                grads = jax.tree_util.tree_unflatten(treedef, outs)
+                ef = jax.tree_util.tree_unflatten(treedef, new_ef)
+            grads = sync(grads, mesh, in_specs=P())
+            lr = cosine_schedule(opt.step, 10, args.steps * 10)
+            params, opt = adamw_update(ocfg, grads, params, opt, lr)
+            return params, opt, metrics, ef
+
+        ef = make_ef_state(params) if args.compress else params
+        params = jax.device_put(params, rep)
+        opt = jax.device_put(opt, rep)
+
+        def one_step(params, opt, batch):
+            nonlocal ef
+            batch = {k: jax.device_put(v, bsh["tokens"])
+                     for k, v in batch.items()}
+            params, opt, metrics, ef = ddp_step(params, opt, batch, ef)
+            return params, opt, metrics
+
+    losses = []
+    for step in range(start_step, start_step + args.steps):
+        batch = data.batch_at(step)
+        t0 = time.time()
+        params, opt, metrics = one_step(params, opt, batch)
+        ce = float(metrics["ce"])
+        losses.append(ce)
+        print(f"step {step:4d} ce={ce:7.4f} "
+              f"({time.time() - t0:5.2f}s)")
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save_async(step, (params, opt))
+    if mgr:
+        mgr.wait()
+        mgr.close()
+    # basic sanity: loss must decrease on synthetic data
+    if len(losses) >= 10:
+        print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+              f"(improved={losses[-1] < losses[0]})")
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b-smoke")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--mesh", default="2x2")
+    ap.add_argument("--mode", default="pjit", choices=["pjit", "ddp"])
+    ap.add_argument("--sync", default="picsou", choices=["picsou", "ata"])
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--restore", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+    run(args)
+
+
+if __name__ == "__main__":
+    main()

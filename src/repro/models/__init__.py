@@ -1,0 +1,11 @@
+"""Model zoo: dense GQA / MoE / RWKV6 / hybrid / enc-dec / VLM."""
+
+from .model import (cache_specs, decode_step, forward, init_model,
+                    input_specs, layer_plan, loss_fn, model_defs,
+                    param_specs, prefill)
+from .sharding import DEFAULT_RULES, sharding_for, spec_for, tree_shardings
+
+__all__ = ["forward", "loss_fn", "prefill", "decode_step", "init_model",
+           "model_defs", "param_specs", "layer_plan", "input_specs",
+           "cache_specs", "DEFAULT_RULES", "spec_for", "sharding_for",
+           "tree_shardings"]

@@ -1,0 +1,207 @@
+"""Attention implementations (XLA path; the Pallas kernel mirrors these).
+
+Three execution strategies, selected by config/shape:
+
+* ``attention_scan``        — blocked online-softmax over KV blocks via
+  ``lax.scan`` with causal/window masking. O(block) memory, but a causal
+  mask burns ~2x the minimal FLOPs (every q block visits every kv block).
+  This is the BASELINE the roofline §Perf iterates on.
+* ``attention_triangular``  — unrolled lower-triangular schedule: q block i
+  only visits kv blocks <= i via static slices. ~minimal FLOPs; larger HLO.
+  Sliding-window variants slice only the in-window kv blocks.
+* ``attention_decode``      — q_len == 1 against a KV cache (full or
+  sliding-window slice).
+
+All support GQA by folding query-head groups onto KV heads.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention", "attention_decode", "update_kv_cache"]
+
+NEG_INF = -1e30
+
+
+def _gqa_reshape(q, n_kv: int):
+    """(B,S,H,D) -> (B,S,KV,G,D) where H = KV * G."""
+    b, s, h, d = q.shape
+    g = h // n_kv
+    return q.reshape(b, s, n_kv, g, d)
+
+
+def _block_scores(qb, kb):
+    """qb: (B,bq,KV,G,D), kb: (B,bkv,KV,D) -> (B,KV,G,bq,bkv)."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", qb, kb)
+
+
+def _block_av(p, vb):
+    """p: (B,KV,G,bq,bkv), vb: (B,bkv,KV,D) -> (B,bq,KV,G,D)."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", p, vb)
+
+
+def _mask(bq_idx, bkv_idx, bq, bkv, causal, window):
+    """(bq, bkv) additive mask for block (bq_idx, bkv_idx)."""
+    q_pos = bq_idx * bq + jnp.arange(bq)[:, None]
+    k_pos = bkv_idx * bkv + jnp.arange(bkv)[None, :]
+    ok = jnp.ones((bq, bkv), dtype=bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _online_update(carry, scores, vb):
+    """Online-softmax accumulate: carry = (m, l, acc)."""
+    m_prev, l_prev, acc = carry
+    m_cur = jnp.max(scores, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[..., None])
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    acc = acc * alpha[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, vb)
+    return m_new, l_new, acc
+
+
+def attention_scan(q, k, v, *, causal: bool, window: int = 0,
+                   block_q: int = 512, block_kv: int = 1024):
+    """Blocked online-softmax attention; masked blocks still compute."""
+    b, sq, h, d = q.shape
+    _, skv, n_kv, _ = k.shape
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    nq, nkv = -(-sq // bq), -(-skv // bkv)
+    scale = 1.0 / math.sqrt(d)
+    pad_q, pad_kv = nq * bq - sq, nkv * bkv - skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    qr = _gqa_reshape(q * scale, n_kv)
+    qr = qr.reshape(b, nq, bq, n_kv, h // n_kv, d)
+    kr = k.reshape(b, nkv, bkv, n_kv, d)
+    vr = v.reshape(b, nkv, bkv, n_kv, d)
+
+    def q_block(qi, qb):
+        def kv_step(carry, kv_i):
+            kb = kr[:, kv_i]
+            vb = vr[:, kv_i]
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(jnp.float32)
+            s = s + _mask(qi, kv_i, bq, bkv, causal, window)[None, None, None]
+            # mask padded kv tail
+            k_pos = kv_i * bkv + jnp.arange(bkv)
+            s = jnp.where((k_pos < skv)[None, None, None, None, :], s,
+                          NEG_INF)
+            return _online_update(carry, s, vb.astype(jnp.float32)), None
+
+        g = h // n_kv
+        m0 = jnp.full((b, n_kv, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, n_kv, g, bq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, i: kv_step(c, i), (m0, l0, a0),
+            jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B, KV, G, bq, D)
+
+    outs = []
+    for qi in range(nq):
+        outs.append(q_block(qi, qr[:, qi]))
+    out = jnp.stack(outs, axis=1)  # (B, nq, KV, G, bq, D)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(b, nq * bq, h, d)
+    if pad_q:
+        out = out[:, :sq]
+    return out.astype(q.dtype)
+
+
+def attention_triangular(q, k, v, *, causal: bool, window: int = 0,
+                         block_q: int = 512, block_kv: int = 1024):
+    """Unrolled triangular schedule: q block i reads only kv blocks that
+    intersect its causal/window range (static slices => ~minimal FLOPs)."""
+    b, sq, h, d = q.shape
+    _, skv, n_kv, _ = k.shape
+    bq = min(block_q, sq)
+    nq = -(-sq // bq)
+    scale = 1.0 / math.sqrt(d)
+    g = h // n_kv
+    qr = _gqa_reshape(q * scale, n_kv)
+    offset = skv - sq  # cache prefix (prefill with pre-existing cache)
+
+    outs = []
+    for qi in range(nq):
+        q_lo = qi * bq
+        q_hi = min(q_lo + bq, sq)
+        qb = qr[:, q_lo:q_hi]
+        k_hi = (q_hi + offset) if causal else skv
+        k_lo = 0
+        if window > 0:
+            k_lo = max(0, q_lo + offset - window + 1)
+        kb = k[:, k_lo:k_hi]
+        vb = v[:, k_lo:k_hi]
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(jnp.float32)
+        q_pos = (jnp.arange(q_lo, q_hi) + offset)[:, None]
+        k_pos = jnp.arange(k_lo, k_hi)[None, :]
+        ok = jnp.ones((q_hi - q_lo, k_hi - k_lo), bool)
+        if causal:
+            ok &= k_pos <= q_pos
+        if window > 0:
+            ok &= k_pos > q_pos - window
+        s = s + jnp.where(ok, 0.0, NEG_INF)[None, None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p,
+                       vb.astype(jnp.float32))
+        outs.append(o.reshape(b, q_hi - q_lo, h, d))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              impl: str = "scan", block_q: int = 512, block_kv: int = 1024):
+    """q: (B,Sq,H,D); k,v: (B,Skv,KV,D)."""
+    if impl == "triangular":
+        return attention_triangular(q, k, v, causal=causal, window=window,
+                                    block_q=block_q, block_kv=block_kv)
+    return attention_scan(q, k, v, causal=causal, window=window,
+                          block_q=block_q, block_kv=block_kv)
+
+
+def attention_decode(q, k_cache, v_cache, *, window: int = 0,
+                     valid_len=None):
+    """Single-token decode: q (B,1,H,D) against cache (B,S,KV,D).
+
+    SWA caches are ring buffers of capacity == window, so they arrive here
+    already window-sized; ``valid_len`` (traced) masks unwritten slots.
+    """
+    b, _, h, d = q.shape
+    _, s, n_kv, _ = k_cache.shape
+    if window > 0 and s > window:
+        k_cache = k_cache[:, s - window:]
+        v_cache = v_cache[:, s - window:]
+        s = window
+    scale = 1.0 / math.sqrt(d)
+    qr = _gqa_reshape(q * scale, n_kv)[:, 0]          # (B,KV,G,D)
+    s_ = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache).astype(jnp.float32)
+    if valid_len is not None:
+        pos_k = jnp.arange(s)
+        s_ = jnp.where((pos_k < valid_len)[None, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def update_kv_cache(k_cache, v_cache, k_new, v_new, pos):
+    """Insert new K/V at ring position ``pos % capacity`` (decode step)."""
+    cap = k_cache.shape[1]
+    write = pos % cap
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), write, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), write, axis=1)
+    return k_cache, v_cache

@@ -1,0 +1,671 @@
+"""Layer definitions for every architecture family in the pool.
+
+Pure-functional: each ``*_defs`` function returns a PD tree (shapes +
+logical sharding names); each ``*_fwd`` consumes the matching param tree.
+Blocks are written to be stacked on a leading 'layers' axis and driven by
+``lax.scan`` (see model.py's segment machinery).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import attention, attention_decode, update_kv_cache
+from .params import PD
+from .sharding import constrain
+
+__all__ = [
+    "rmsnorm", "rope", "block_defs", "block_fwd", "block_decode",
+    "embed_defs", "moe_ffn", "init_cache_shapes",
+]
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (B,S,H,D); positions: (B,S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def swiglu(x, wi, wg, wo):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, wi))
+    h = h * jnp.einsum("bsd,df->bsf", x, wg)
+    return jnp.einsum("bsf,fd->bsd", h, wo)
+
+
+# --------------------------------------------------------------------------
+# attention sub-block
+# --------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig, cross: bool = False) -> Dict[str, PD]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    out = {
+        "wq": PD((d, h, hd), ("p_embed", "p_heads", "p_head_dim")),
+        "wk": PD((d, kv, hd), ("p_embed", "p_kv_heads", "p_head_dim")),
+        "wv": PD((d, kv, hd), ("p_embed", "p_kv_heads", "p_head_dim")),
+        "wo": PD((h, hd, d), ("p_heads", "p_head_dim", "p_embed"),
+                 scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = PD((h, hd), ("p_heads", "p_head_dim"), init="zeros")
+        out["bk"] = PD((kv, hd), ("p_kv_heads", "p_head_dim"), init="zeros")
+        out["bv"] = PD((kv, hd), ("p_kv_heads", "p_head_dim"), init="zeros")
+    if cross:
+        out["gate"] = PD((), (), init="zeros")   # tanh-gated cross-attn
+    return out
+
+
+def _qkv(p, x, kv_x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", kv_x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", kv_x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def attn_fwd(p, x, cfg: ModelConfig, *, positions, window: int,
+             causal: bool = True, kv_x=None, cross_positions=None,
+             impl: Optional[str] = None):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    kv_inp = x if kv_x is None else kv_x
+    q, k, v = _qkv(p, x, kv_inp, cfg)
+    if causal or kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions if cross_positions is None else cross_positions,
+                 cfg.rope_theta)
+    o = attention(q, k, v, causal=causal, window=window,
+                  impl=impl or "scan",
+                  block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+    if "gate" in p:
+        o = o * jnp.tanh(p["gate"]).astype(o.dtype)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+def attn_decode_fwd(p, x, cfg: ModelConfig, *, cache, pos, window: int,
+                    static_kv: bool = False):
+    """One-token decode. cache = (k_cache, v_cache); pos = write index."""
+    q, k_new, v_new = _qkv(p, x, x, cfg)
+    k_cache, v_cache = cache
+    if static_kv:
+        # cross-attention: cache holds the (already-projected) memory
+        o = attention_decode(q, k_cache, v_cache, window=0)
+    else:
+        posv = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+        q = rope(q, posv, cfg.rope_theta)
+        k_new = rope(k_new, posv, cfg.rope_theta)
+        k_cache, v_cache = update_kv_cache(k_cache, v_cache, k_new, v_new,
+                                           pos)
+        valid = jnp.minimum(pos + 1, k_cache.shape[1])
+        o = attention_decode(q, k_cache, v_cache, window=window,
+                             valid_len=valid)
+    if "gate" in p:
+        o = o * jnp.tanh(p["gate"]).astype(o.dtype)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(x.dtype))
+    return out, (k_cache, v_cache)
+
+
+# --------------------------------------------------------------------------
+# MoE FFN (capacity-buffer dispatch; experts shard over 'model' => EP)
+# --------------------------------------------------------------------------
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, ef, e = cfg.d_model, cfg.expert_d_ff, cfg.n_experts
+    out = {
+        "router": PD((d, e), ("p_embed", "experts")),
+        "wi": PD((e, d, ef), ("experts", "p_embed", "p_expert_mlp")),
+        "wg": PD((e, d, ef), ("experts", "p_embed", "p_expert_mlp")),
+        "wo": PD((e, ef, d), ("experts", "p_expert_mlp", "p_embed"),
+                 scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    if cfg.n_shared_experts:
+        sf = cfg.n_shared_experts * ef
+        out["shared"] = {
+            "wi": PD((d, sf), ("p_embed", "p_mlp")),
+            "wg": PD((d, sf), ("p_embed", "p_mlp")),
+            "wo": PD((sf, d), ("p_mlp", "p_embed"),
+                     scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+        }
+    return out
+
+
+def moe_ffn_dense(p, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense-dispatch MoE: every expert runs on every token, combined with
+    the (renormalized) top-k gates.
+
+    §Perf lever for few-expert MoEs (mixtral E=8, k=2): E/k more expert
+    FLOPs in exchange for ZERO token movement — no scatter/gather, so the
+    autodiff of the dispatch generates no cross-shard all-reduces (the
+    dominant collective cost of the scatter path at scale).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("bsd,de->bse", x,
+                        p["router"].astype(x.dtype)).astype(jnp.float32)
+    gate_vals, idx = jax.lax.top_k(logits, k)
+    gates_k = jax.nn.softmax(gate_vals, axis=-1)
+    # scatter top-k gates into dense (B,S,E) via one-hot combine
+    gates = jnp.einsum("bske,bsk->bse", jax.nn.one_hot(idx, e), gates_k)
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros(e).at[idx.reshape(-1)].add(1.0) / (b * s * k)
+    aux = e * jnp.sum(me * ce)
+
+    h = jax.nn.silu(jnp.einsum("bsd,edf->ebsf", x,
+                               p["wi"].astype(x.dtype)))
+    h = h * jnp.einsum("bsd,edf->ebsf", x, p["wg"].astype(x.dtype))
+    y = jnp.einsum("ebsf,efd->ebsd", h, p["wo"].astype(x.dtype))
+    out = jnp.einsum("ebsd,bse->bsd", y, gates.astype(x.dtype))
+    if "shared" in p:
+        sh = p["shared"]
+        out = out + swiglu(x, sh["wi"].astype(x.dtype),
+                           sh["wg"].astype(x.dtype),
+                           sh["wo"].astype(x.dtype))
+    return out, aux.astype(jnp.float32)
+
+
+def moe_ffn(p, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k capacity-buffer MoE. Returns (out, aux_loss)."""
+    if getattr(cfg, "moe_impl", "scatter") == "dense":
+        return moe_ffn_dense(p, x, cfg)
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(cfg.capacity_factor * n * k / e)
+    cap = max(8, -(-cap // 8) * 8)
+    xt = x.reshape(n, d)
+    logits = jnp.einsum("nd,de->ne", xt, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    gate_vals, idx = jax.lax.top_k(logits, k)               # (N,k)
+    gates = jax.nn.softmax(gate_vals, axis=-1)
+    # aux load-balancing loss (Switch-style)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (N,E)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros(e).at[idx.reshape(-1)].add(1.0) / (n * k)
+    aux = e * jnp.sum(me * ce)
+
+    flat_e = idx.reshape(-1)                                # (N*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e))
+    ranks_sorted = jnp.arange(n * k) - starts[sorted_e]
+    ranks = jnp.zeros(n * k, jnp.int32).at[order].set(
+        ranks_sorted.astype(jnp.int32))
+    keep = ranks < cap
+    slot = jnp.where(keep, flat_e * cap + ranks, e * cap)   # drop -> sentinel
+    tok = jnp.repeat(jnp.arange(n), k)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(xt[tok])
+    buf = buf[:e * cap].reshape(e, cap, d)
+    # EP dispatch boundary. Baseline: capacity dim replicated (every data
+    # shard computes every expert row). §Perf lever `moe_dispatch_2d`
+    # shards capacity over 'data' => true (experts x data) 2D dispatch.
+    cap_name = "expert_cap" if cfg.moe_dispatch_2d else None
+    buf = constrain(buf, "experts", cap_name, "embed")
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(x.dtype))
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))
+    y = constrain(y, "experts", cap_name, "embed")
+    y = jnp.concatenate([y.reshape(e * cap, d),
+                         jnp.zeros((1, d), x.dtype)], axis=0)
+    out_tok = y[slot] * gates.reshape(-1)[:, None].astype(x.dtype)
+    out = out_tok.reshape(n, k, d).sum(axis=1).reshape(b, s, d)
+    if "shared" in p:
+        sh = p["shared"]
+        out = out + swiglu(x, sh["wi"].astype(x.dtype),
+                           sh["wg"].astype(x.dtype),
+                           sh["wo"].astype(x.dtype))
+    return out, aux.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# RWKV6 time-mix / channel-mix (Finch: data-dependent decay)
+# --------------------------------------------------------------------------
+
+def rwkv_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, dff = cfg.d_model, cfg.d_ff
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    lora = 64
+    return {
+        "mu": PD((5, d), (None, "p_embed")),         # r,k,v,w,g token-shift
+        "wr": PD((d, d), ("p_embed", "p_mlp")),
+        "wk": PD((d, d), ("p_embed", "p_mlp")),
+        "wv": PD((d, d), ("p_embed", "p_mlp")),
+        "wg": PD((d, d), ("p_embed", "p_mlp")),
+        "w0": PD((h, hd), ("p_heads", "p_head_dim"), init="zeros"),
+        "wa": PD((d, lora), ("p_embed", None)),
+        "wb": PD((lora, d), (None, "p_mlp")),
+        "u": PD((h, hd), ("p_heads", "p_head_dim")),
+        "ln_x": PD((d,), ("p_embed",), init="ones"),
+        "wo": PD((d, d), ("p_mlp", "p_embed"),
+                 scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+        "cm_mu": PD((2, d), (None, "p_embed")),      # channel-mix shifts
+        "cm_wk": PD((d, dff), ("p_embed", "p_mlp")),
+        "cm_wv": PD((dff, d), ("p_mlp", "p_embed"),
+                    scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+        "cm_wr": PD((d, d), ("p_embed", "p_mlp")),
+    }
+
+
+def _token_shift(x, x_prev):
+    """x: (B,S,D); x_prev: (B,D) last token of previous segment."""
+    shifted = jnp.concatenate(
+        [x_prev[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def rwkv_time_mix(p, x, cfg: ModelConfig, state, x_prev):
+    """state: (B,H,hd,hd) recurrent matrix; x_prev: (B,D).
+
+    Returns (out, new_state, new_x_prev). Sequential scan over time — the
+    chunked Pallas kernel replaces this on TPU (kernels/rwkv6_scan.py).
+    """
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"].astype(x.dtype)
+    xr = x + (xs - x) * mu[0]
+    xk = x + (xs - x) * mu[1]
+    xv = x + (xs - x) * mu[2]
+    xw = x + (xs - x) * mu[3]
+    xg = x + (xs - x) * mu[4]
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype)))
+    # data-dependent decay (the Finch signature): w = exp(-exp(w0 + lora))
+    dw = jnp.einsum("bsd,dl,le->bse", xw, p["wa"].astype(x.dtype),
+                    p["wb"].astype(x.dtype))
+    w_log = -jnp.exp(jnp.clip(
+        p["w0"].reshape(-1).astype(jnp.float32) + dw.astype(jnp.float32),
+        -8.0, 4.0))                                     # (B,S,D), <= 0
+    r = r.reshape(b, s, h, hd)
+    k = k.reshape(b, s, h, hd)
+    v = v.reshape(b, s, h, hd)
+    w = jnp.exp(w_log).reshape(b, s, h, hd)             # decay in (0,1)
+    u = p["u"].astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                            # (B,H,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, yt
+
+    xs_t = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+            k.transpose(1, 0, 2, 3).astype(jnp.float32),
+            v.transpose(1, 0, 2, 3).astype(jnp.float32),
+            w.transpose(1, 0, 2, 3).astype(jnp.float32))
+    blk_g = max(int(cfg.rwkv_scan_block), 1)
+    if blk_g > 1 and s % blk_g == 0 and s > blk_g:
+        # §Perf lever: G timesteps per scan iteration — the (hd x hd)
+        # recurrent state round-trips HBM once per block instead of once
+        # per token (the Pallas kernel keeps it VMEM-resident entirely).
+        xs_blk = tuple(a.reshape(s // blk_g, blk_g, *a.shape[1:])
+                       for a in xs_t)
+
+        def block_step(S, blk):
+            ys = []
+            for i in range(blk_g):
+                S, yt = step(S, tuple(a[i] for a in blk))
+                ys.append(yt)
+            return S, jnp.stack(ys)
+
+        new_state, ys = jax.lax.scan(block_step, state.astype(jnp.float32),
+                                     xs_blk)
+        ys = ys.reshape(s, *ys.shape[2:])
+    else:
+        new_state, ys = jax.lax.scan(step, state.astype(jnp.float32), xs_t)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = rmsnorm(y, p["ln_x"].astype(x.dtype), cfg.norm_eps) * g
+    out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(x.dtype))
+    return out, new_state.astype(jnp.float32), x[:, -1, :]
+
+
+def rwkv_channel_mix(p, x, cfg: ModelConfig, x_prev):
+    xs = _token_shift(x, x_prev)
+    mu = p["cm_mu"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    kk = jnp.square(jax.nn.relu(
+        jnp.einsum("bsd,df->bsf", xk, p["cm_wk"].astype(x.dtype))))
+    rr = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, p["cm_wr"].astype(x.dtype)))
+    out = rr * jnp.einsum("bsf,fd->bsd", kk, p["cm_wv"].astype(x.dtype))
+    return out, x[:, -1, :]
+
+
+# --------------------------------------------------------------------------
+# Hymba-style parallel SSM heads (diagonal selective state space)
+# --------------------------------------------------------------------------
+
+def ssm_defs(cfg: ModelConfig) -> Dict[str, PD]:
+    d = cfg.d_model
+    h = cfg.ssm_heads or cfg.n_heads
+    hd = cfg.resolved_head_dim
+    st = cfg.ssm_state
+    return {
+        "wx": PD((d, h, hd), ("p_embed", "p_heads", "p_head_dim")),
+        "wdt": PD((d, h), ("p_embed", "p_heads")),
+        "wB": PD((d, h, st), ("p_embed", "p_heads", "ssm_state")),
+        "wC": PD((d, h, st), ("p_embed", "p_heads", "ssm_state")),
+        "a_log": PD((h, st), ("p_heads", "ssm_state")),
+        "skip": PD((h,), ("p_heads",), init="ones"),
+        "wo": PD((h, hd, d), ("p_heads", "p_head_dim", "p_embed"),
+                 scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def ssm_fwd(p, x, cfg: ModelConfig, state):
+    """state: (B,H,hd,st). Sequential selective scan; returns (out, state)."""
+    b, s, d = x.shape
+    h = cfg.ssm_heads or cfg.n_heads
+    hd, st = cfg.resolved_head_dim, cfg.ssm_state
+    xh = jnp.einsum("bsd,dhe->bshe", x, p["wx"].astype(x.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype))
+        .astype(jnp.float32))
+    bb = jnp.einsum("bsd,dhn->bshn", x, p["wB"].astype(x.dtype))
+    cc = jnp.einsum("bsd,dhn->bshn", x, p["wC"].astype(x.dtype))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))        # (H,st), < 0
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt[..., None] * a[None])       # (B,H,st)
+        upd = jnp.einsum("bhe,bhn->bhen", xt, bt * dtt[..., None])
+        hstate = hstate * decay[:, :, None, :] + upd
+        yt = jnp.einsum("bhen,bhn->bhe", hstate, ct)
+        return hstate, yt
+
+    inp = (xh.transpose(1, 0, 2, 3).astype(jnp.float32),
+           dt.transpose(1, 0, 2),
+           bb.transpose(1, 0, 2, 3).astype(jnp.float32),
+           cc.transpose(1, 0, 2, 3).astype(jnp.float32))
+    blk_g = max(int(cfg.rwkv_scan_block), 1)
+    if blk_g > 1 and s % blk_g == 0 and s > blk_g:
+        inp_blk = tuple(a.reshape(s // blk_g, blk_g, *a.shape[1:])
+                        for a in inp)
+
+        def block_step(hs, blk):
+            ys = []
+            for i in range(blk_g):
+                hs, yt = step(hs, tuple(a[i] for a in blk))
+                ys.append(yt)
+            return hs, jnp.stack(ys)
+
+        new_state, ys = jax.lax.scan(block_step, state.astype(jnp.float32),
+                                     inp_blk)
+        ys = ys.reshape(s, *ys.shape[2:])
+    else:
+        new_state, ys = jax.lax.scan(step, state.astype(jnp.float32), inp)
+    y = ys.transpose(1, 0, 2, 3)
+    y = y + xh.astype(jnp.float32) * p["skip"].astype(jnp.float32)[None, None,
+                                                                   :, None]
+    out = jnp.einsum("bshe,hed->bsd", y.astype(x.dtype),
+                     p["wo"].astype(x.dtype))
+    return out, new_state.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# block assembly per family
+# --------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, PD]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "wi": PD((d, f), ("p_embed", "p_mlp")),
+        "wg": PD((d, f), ("p_embed", "p_mlp")),
+        "wo": PD((f, d), ("p_mlp", "p_embed"),
+                 scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def block_defs(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    """kind: dense | dense_swa | dense_global | moe | moe_swa | rwkv |
+    hybrid | hybrid_global | enc | dec | cross."""
+    d = cfg.d_model
+    ln = lambda: PD((d,), ("p_embed",), init="ones")  # noqa: E731
+    if kind == "rwkv":
+        return {"ln1": ln(), "tm": rwkv_defs(cfg), "ln2": ln(),
+                "cm": {k: v for k, v in rwkv_defs(cfg).items()
+                       if k.startswith("cm_")}}
+    if kind in ("hybrid", "hybrid_global"):
+        return {"ln1": ln(), "attn": attn_defs(cfg), "ssm": ssm_defs(cfg),
+                "ln_attn": ln(), "ln_ssm": ln(),
+                "ln2": ln(), "mlp": mlp_defs(cfg)}
+    if kind in ("moe", "moe_swa"):
+        return {"ln1": ln(), "attn": attn_defs(cfg), "ln2": ln(),
+                "moe": moe_defs(cfg)}
+    if kind == "dec":
+        return {"ln1": ln(), "attn": attn_defs(cfg),
+                "lnx": ln(), "xattn": attn_defs(cfg),
+                "ln2": ln(), "mlp": mlp_defs(cfg)}
+    if kind == "cross":
+        return {"lnx": ln(), "xattn": attn_defs(cfg, cross=True),
+                "ln2": ln(), "mlp": mlp_defs(cfg)}
+    # dense / dense_swa / dense_global / enc / dense_wide
+    d_ff = cfg.d_ff
+    return {"ln1": ln(), "attn": attn_defs(cfg), "ln2": ln(),
+            "mlp": mlp_defs(cfg, d_ff)}
+
+
+def _window_for(cfg: ModelConfig, kind: str) -> int:
+    if kind.endswith("_swa") or kind == "hybrid":
+        return cfg.sliding_window
+    return 0
+
+
+def block_fwd(p, x, cfg: ModelConfig, kind: str, *, positions,
+              memory=None, impl: Optional[str] = None,
+              carry: Optional[Dict[str, Any]] = None):
+    """Full-sequence forward. Returns (x, aux_loss, new_carry).
+
+    ``carry`` holds recurrent state for rwkv/ssm blocks (threaded across
+    sequence chunks); attention caches are not materialized in train mode.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    new_carry: Dict[str, Any] = {}
+    window = _window_for(cfg, kind)
+    if kind == "rwkv":
+        h, tm_state, xp = rwkv_time_mix(
+            p["tm"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
+            carry["tm_state"], carry["tm_xprev"])
+        new_carry["tm_state"], new_carry["tm_xprev"] = tm_state, xp
+        x = x + h
+        h, xp2 = rwkv_channel_mix(p["cm"],
+                                  rmsnorm(x, p["ln2"], cfg.norm_eps), cfg,
+                                  carry["cm_xprev"])
+        new_carry["cm_xprev"] = xp2
+        return x + h, aux, new_carry
+    if kind in ("hybrid", "hybrid_global"):
+        xin = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        ao, _ = attn_fwd(p["attn"], xin, cfg, positions=positions,
+                         window=window, impl=impl)
+        so, sstate = ssm_fwd(p["ssm"], xin, cfg, carry["ssm_state"])
+        new_carry["ssm_state"] = sstate
+        h = 0.5 * (rmsnorm(ao, p["ln_attn"], cfg.norm_eps)
+                   + rmsnorm(so, p["ln_ssm"], cfg.norm_eps))
+        x = x + h
+        m = p["mlp"]
+        x = x + swiglu(rmsnorm(x, p["ln2"], cfg.norm_eps),
+                       m["wi"].astype(x.dtype), m["wg"].astype(x.dtype),
+                       m["wo"].astype(x.dtype))
+        return x, aux, new_carry
+    if kind == "cross":
+        h, _ = attn_fwd(p["xattn"], rmsnorm(x, p["lnx"], cfg.norm_eps), cfg,
+                        positions=positions, window=0, causal=False,
+                        kv_x=memory, impl=impl)
+        x = x + h
+        m = p["mlp"]
+        x = x + swiglu(rmsnorm(x, p["ln2"], cfg.norm_eps),
+                       m["wi"].astype(x.dtype), m["wg"].astype(x.dtype),
+                       m["wo"].astype(x.dtype))
+        return x, aux, new_carry
+    # attention blocks (dense / moe / enc / dec)
+    causal = kind != "enc"
+    h, _ = attn_fwd(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
+                    positions=positions, window=window, causal=causal,
+                    impl=impl)
+    x = x + h
+    if kind == "dec":
+        h, _ = attn_fwd(p["xattn"], rmsnorm(x, p["lnx"], cfg.norm_eps), cfg,
+                        positions=positions, window=0, causal=False,
+                        kv_x=memory, impl=impl)
+        x = x + h
+    if kind in ("moe", "moe_swa"):
+        h, aux = moe_ffn(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg)
+        x = x + h
+    else:
+        m = p["mlp"]
+        x = x + swiglu(rmsnorm(x, p["ln2"], cfg.norm_eps),
+                       m["wi"].astype(x.dtype), m["wg"].astype(x.dtype),
+                       m["wo"].astype(x.dtype))
+    return x, aux, new_carry
+
+
+def block_decode(p, x, cfg: ModelConfig, kind: str, *, cache, pos):
+    """One-token decode. cache is a dict; returns (x, new_cache)."""
+    window = _window_for(cfg, kind)
+    new_cache: Dict[str, Any] = {}
+    if kind == "rwkv":
+        h, st, xp = rwkv_time_mix(p["tm"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                  cfg, cache["tm_state"], cache["tm_xprev"])
+        new_cache["tm_state"], new_cache["tm_xprev"] = st, xp
+        x = x + h
+        h, xp2 = rwkv_channel_mix(p["cm"],
+                                  rmsnorm(x, p["ln2"], cfg.norm_eps), cfg,
+                                  cache["cm_xprev"])
+        new_cache["cm_xprev"] = xp2
+        return x + h, new_cache
+    if kind in ("hybrid", "hybrid_global"):
+        xin = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        ao, kvc = attn_decode_fwd(p["attn"], xin, cfg,
+                                  cache=(cache["k"], cache["v"]), pos=pos,
+                                  window=window)
+        new_cache["k"], new_cache["v"] = kvc
+        so, sstate = ssm_fwd(p["ssm"], xin, cfg, cache["ssm_state"])
+        new_cache["ssm_state"] = sstate
+        h = 0.5 * (rmsnorm(ao, p["ln_attn"], cfg.norm_eps)
+                   + rmsnorm(so, p["ln_ssm"], cfg.norm_eps))
+        x = x + h
+        m = p["mlp"]
+        x = x + swiglu(rmsnorm(x, p["ln2"], cfg.norm_eps),
+                       m["wi"].astype(x.dtype), m["wg"].astype(x.dtype),
+                       m["wo"].astype(x.dtype))
+        return x, new_cache
+    h, kvc = attn_decode_fwd(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                             cfg, cache=(cache["k"], cache["v"]), pos=pos,
+                             window=window)
+    new_cache["k"], new_cache["v"] = kvc
+    x = x + h
+    if kind in ("dec", "cross"):
+        h, _ = attn_decode_fwd(p["xattn"],
+                               rmsnorm(x, p["lnx"], cfg.norm_eps), cfg,
+                               cache=(cache["xk"], cache["xv"]), pos=pos,
+                               window=0, static_kv=True)
+        new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+        x = x + h
+    if kind in ("moe", "moe_swa"):
+        h, _ = moe_ffn(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg)
+        x = x + h
+    else:
+        m = p["mlp"]
+        x = x + swiglu(rmsnorm(x, p["ln2"], cfg.norm_eps),
+                       m["wi"].astype(x.dtype), m["wg"].astype(x.dtype),
+                       m["wo"].astype(x.dtype))
+    return x, new_cache
+
+
+def block_decode_cross(p, x, cfg: ModelConfig, *, cache, pos):
+    """Decode through a VLM 'cross' block (no self-attention)."""
+    h, _ = attn_decode_fwd(p["xattn"], rmsnorm(x, p["lnx"], cfg.norm_eps),
+                           cfg, cache=(cache["xk"], cache["xv"]), pos=pos,
+                           window=0, static_kv=True)
+    x = x + h
+    m = p["mlp"]
+    x = x + swiglu(rmsnorm(x, p["ln2"], cfg.norm_eps),
+                   m["wi"].astype(x.dtype), m["wg"].astype(x.dtype),
+                   m["wo"].astype(x.dtype))
+    return x, dict(cache)
+
+
+# --------------------------------------------------------------------------
+# embeddings + cache shape declarations
+# --------------------------------------------------------------------------
+
+def embed_defs(cfg: ModelConfig) -> Dict[str, PD]:
+    d = cfg.d_model
+    out = {
+        "tok": PD((cfg.vocab, d), ("vocab", "p_embed"), scale=1.0),
+        "ln_f": PD((d,), ("p_embed",), init="ones"),
+        "unembed": PD((d, cfg.vocab), ("p_embed", "vocab")),
+    }
+    if cfg.encoder_seq:
+        out["enc_pos"] = PD((cfg.encoder_seq, d), ("enc_seq", "p_embed"),
+                            scale=0.02)
+    return out
+
+
+def cache_defs_for_kind(cfg: ModelConfig, kind: str, batch: int,
+                        seq: int) -> Dict[str, Tuple[Tuple[int, ...], Tuple]]:
+    """Cache entry shapes + logical names for one block of ``kind``."""
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    h = cfg.ssm_heads or cfg.n_heads
+    window = _window_for(cfg, kind)
+    s_eff = min(seq, window) if window else seq
+    out: Dict[str, Tuple[Tuple[int, ...], Tuple]] = {}
+    if kind == "rwkv":
+        d = cfg.d_model
+        out["tm_state"] = ((batch, cfg.n_heads, hd, hd),
+                           ("batch", "heads", "head_dim", None))
+        out["tm_xprev"] = ((batch, d), ("batch", "embed"))
+        out["cm_xprev"] = ((batch, d), ("batch", "embed"))
+        return out
+    if kind in ("hybrid", "hybrid_global"):
+        out["ssm_state"] = ((batch, h, hd, cfg.ssm_state),
+                            ("batch", "heads", "head_dim", "ssm_state"))
+    if kind != "rwkv":
+        out["k"] = ((batch, s_eff, kv, hd),
+                    ("batch", "cache_seq", "kv_heads", "head_dim"))
+        out["v"] = ((batch, s_eff, kv, hd),
+                    ("batch", "cache_seq", "kv_heads", "head_dim"))
+    if kind in ("dec", "cross"):
+        mem = cfg.encoder_seq or cfg.vision_seq
+        out["xk"] = ((batch, mem, kv, hd),
+                     ("batch", None, "kv_heads", "head_dim"))
+        out["xv"] = ((batch, mem, kv, hd),
+                     ("batch", None, "kv_heads", "head_dim"))
+    if kind == "cross":
+        out.pop("k"), out.pop("v")
+    return out
+
+
+def init_cache_shapes(cfg, kind, batch, seq):
+    return cache_defs_for_kind(cfg, kind, batch, seq)

@@ -1,0 +1,398 @@
+"""Model assembly: layer plans, parameter trees, train/prefill/decode steps.
+
+A config resolves to a *layer plan* — an ordered list of (block kind,
+count) segments; each multi-layer segment is a ``lax.scan`` over stacked
+parameters (with optional remat), which keeps the HLO small even for
+88-layer models. Recurrent families (rwkv / hybrid) thread their state
+through the blocks; decode threads per-layer caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from . import blocks as B
+from .params import PD, init_params, names_tree, shape_tree
+from .sharding import constrain
+
+__all__ = ["layer_plan", "model_defs", "init_model", "forward", "loss_fn",
+           "prefill", "decode_step", "input_specs", "cache_specs",
+           "Segment"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str
+    count: int
+
+
+def layer_plan(cfg: ModelConfig) -> List[Segment]:
+    f = cfg.family
+    L = cfg.n_layers
+    if f == "dense":
+        kind = "dense_swa" if cfg.sliding_window else "dense"
+        return [Segment(kind, L)]
+    if f == "moe":
+        kind = "moe_swa" if cfg.sliding_window else "moe"
+        segs = []
+        if cfg.first_dense_layers:
+            segs.append(Segment("dense", cfg.first_dense_layers))
+        segs.append(Segment(kind, L - cfg.first_dense_layers))
+        return segs
+    if f == "ssm":
+        return [Segment("rwkv", L)]
+    if f == "hybrid":
+        # global full-attention at first / middle / last layer (hymba),
+        # sliding-window + parallel SSM heads elsewhere.
+        glb = {0, L // 2, L - 1}
+        kinds = ["hybrid_global" if i in glb else "hybrid"
+                 for i in range(L)]
+        segs: List[Segment] = []
+        for k in kinds:
+            if segs and segs[-1].kind == k:
+                segs[-1] = Segment(k, segs[-1].count + 1)
+            else:
+                segs.append(Segment(k, 1))
+        return segs
+    if f == "encdec":
+        return [Segment("dec", L)]
+    if f == "vlm":
+        period = cfg.cross_attn_period
+        n_cross = L // period
+        n_self = L - n_cross
+        per_group = period - 1
+        segs: List[Segment] = []
+        for _ in range(n_cross):
+            segs.append(Segment("dense", per_group))
+            segs.append(Segment("cross", 1))
+        rem = n_self - n_cross * per_group
+        if rem > 0:
+            segs.append(Segment("dense", rem))
+        return segs
+    raise ValueError(f"unknown family {f}")
+
+
+def encoder_plan(cfg: ModelConfig) -> List[Segment]:
+    if cfg.encoder_layers:
+        return [Segment("enc", cfg.encoder_layers)]
+    return []
+
+
+def _stack_defs(defs, n: int):
+    """Add a leading 'layers' axis of extent n to every PD in the tree."""
+    return jax.tree_util.tree_map(
+        lambda d: PD((n,) + d.shape, ("layers",) + d.names,
+                     scale=d.scale, init=d.init, dtype=d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, PD))
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    segs = layer_plan(cfg)
+    out: Dict[str, Any] = {
+        "embed": B.embed_defs(cfg),
+        "segments": [
+            _stack_defs(B.block_defs(cfg, s.kind), s.count)
+            if s.count > 1 else B.block_defs(cfg, s.kind)
+            for s in segs
+        ],
+    }
+    enc = encoder_plan(cfg)
+    if enc:
+        out["encoder"] = [
+            _stack_defs(B.block_defs(cfg, s.kind), s.count)
+            if s.count > 1 else B.block_defs(cfg, s.kind)
+            for s in enc
+        ]
+        out["embed"]["enc_ln"] = PD((cfg.d_model,), ("p_embed",),
+                                    init="ones")
+    return out
+
+
+def init_model(cfg: ModelConfig, rng: jax.Array):
+    return init_params(rng, model_defs(cfg), cfg.param_dtype)
+
+
+def param_specs(cfg: ModelConfig):
+    defs = model_defs(cfg)
+    return shape_tree(defs, cfg.param_dtype), names_tree(defs)
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _zero_carry(cfg: ModelConfig, kind: str, batch: int):
+    h = cfg.ssm_heads or cfg.n_heads
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    if kind == "rwkv":
+        return {
+            "tm_state": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+            "tm_xprev": jnp.zeros((batch, d), jnp.float32),
+            "cm_xprev": jnp.zeros((batch, d), jnp.float32),
+        }
+    if kind in ("hybrid", "hybrid_global"):
+        return {"ssm_state": jnp.zeros((batch, h, hd, cfg.ssm_state),
+                                       jnp.float32)}
+    return {}
+
+
+def _run_segment(seg_p, x, cfg: ModelConfig, seg: Segment, *, positions,
+                 memory, impl, return_cache: bool):
+    """Returns (x, aux, caches) — caches stacked over the segment layers."""
+    b = x.shape[0]
+
+    def one(p, x):
+        x = constrain(x, "batch", "seq", "embed")
+        carry = _zero_carry(cfg, seg.kind, b)
+        if seg.kind == "rwkv":
+            xx, aux, nc = B.block_fwd(p, x, cfg, seg.kind,
+                                      positions=positions, memory=memory,
+                                      impl=impl, carry=carry)
+        elif seg.kind in ("hybrid", "hybrid_global"):
+            xx, aux, nc = B.block_fwd(p, x, cfg, seg.kind,
+                                      positions=positions, memory=memory,
+                                      impl=impl, carry=carry)
+        else:
+            xx, aux, nc = B.block_fwd(p, x, cfg, seg.kind,
+                                      positions=positions, memory=memory,
+                                      impl=impl)
+        cache = _build_cache(p, nc, x, cfg, seg.kind, memory,
+                             impl) if return_cache else {}
+        return xx, aux, cache
+
+    if seg.count == 1:
+        x, aux, cache = one(seg_p, x)
+        return x, aux, cache
+
+    def body(carry, p):
+        x, aux = carry
+        xx, a, cache = one(p, x)
+        return (xx, aux + a), cache
+
+    if cfg.remat:
+        if cfg.remat_policy == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            body = jax.checkpoint(body)
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    seg_p)
+    return x, aux, caches
+
+
+def _build_cache(p, new_carry, x_in, cfg: ModelConfig, kind: str, memory,
+                 impl):
+    """Materialize decode caches during prefill."""
+    cache: Dict[str, Any] = {}
+    window = cfg.sliding_window if (kind.endswith("_swa")
+                                    or kind == "hybrid") else 0
+    if kind == "rwkv":
+        return dict(new_carry)
+    if kind in ("hybrid", "hybrid_global"):
+        cache["ssm_state"] = new_carry["ssm_state"]
+    if kind != "cross":
+        # recompute k/v projections for the cache (cheap relative to attn)
+        xin = B.rmsnorm(x_in, p["ln1"], cfg.norm_eps)
+        positions = jnp.arange(x_in.shape[1], dtype=jnp.int32)
+        _, k, v = B._qkv(p["attn"], xin, xin, cfg)
+        k = B.rope(k, positions, cfg.rope_theta)
+        if window and k.shape[1] > window:
+            k, v = k[:, -window:], v[:, -window:]
+        cache["k"], cache["v"] = k, v
+    if kind in ("dec", "cross"):
+        _, xk, xv = B._qkv(p["xattn"], memory, memory, cfg)
+        cache["xk"], cache["xv"] = xk, xv
+    return cache
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """Whisper-style encoder over stub frame embeddings."""
+    x = frames + params["embed"]["enc_pos"][None].astype(frames.dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    for seg_p, seg in zip(params["encoder"], encoder_plan(cfg)):
+        x, _, _ = _run_segment(seg_p, x, cfg, seg, positions=positions,
+                               memory=None, impl=None, return_cache=False)
+    return B.rmsnorm(x, params["embed"]["enc_ln"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, memory=None,
+            impl: Optional[str] = None, return_cache: bool = False):
+    """tokens: (B,S) -> logits (B,S,V) [+ caches]. memory: encoder/vision
+    embeddings for encdec/vlm families (from the stub frontend)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"]["tok"].astype(dtype)[tokens]
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    if memory is not None:
+        memory = constrain(memory.astype(dtype), "batch", None, "embed")
+    aux = jnp.zeros((), jnp.float32)
+    caches = []
+    for seg_p, seg in zip(params["segments"], layer_plan(cfg)):
+        x, a, cache = _run_segment(seg_p, x, cfg, seg, positions=positions,
+                                   memory=memory, impl=impl,
+                                   return_cache=return_cache)
+        aux = aux + a
+        caches.append(cache)
+    x = constrain(x, "batch", "seq", "embed")
+    x = B.rmsnorm(x, params["embed"]["ln_f"].astype(dtype), cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["embed"]["unembed"].astype(dtype))
+    logits = constrain(logits, "batch", "seq", "vocab")
+    if return_cache:
+        return logits, aux, caches
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, impl: Optional[str] = None):
+    """Next-token cross entropy (+0.01 * MoE aux)."""
+    tokens = batch["tokens"]
+    memory = batch.get("memory")
+    if cfg.family == "encdec":
+        memory = encode(params, cfg, batch["frames"])
+    logits, aux = forward(params, cfg, tokens, memory=memory, impl=impl)
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, tokens, *, memory=None,
+            impl: Optional[str] = None, cache_len: Optional[int] = None):
+    """Full-sequence prefill: returns (last-token logits, caches).
+
+    ``cache_len`` pads full-attention KV caches to a target capacity so
+    that decode can append. SWA caches are ring buffers of capacity
+    ``window``; prefill length must be a multiple of the window so the
+    ring write pointer (pos % window) lines up with the oldest entry.
+    """
+    s = tokens.shape[1]
+    if cfg.sliding_window and s % cfg.sliding_window != 0:
+        raise ValueError("prefill length must be a multiple of the window")
+    if cfg.family == "encdec":
+        memory = encode(params, cfg, memory)
+    logits, _, caches = forward(params, cfg, tokens, memory=memory,
+                                impl=impl, return_cache=True)
+    if cache_len is not None and cache_len > s:
+        pad = cache_len - s
+
+        def pad_kv(seg_cache):
+            out = dict(seg_cache)
+            for key in ("k", "v"):
+                if key in out and out[key].shape[-3] == s:
+                    widths = [(0, 0)] * out[key].ndim
+                    widths[-3] = (0, pad)
+                    out[key] = jnp.pad(out[key], widths)
+            return out
+
+        caches = [pad_kv(c) for c in caches]
+    return logits[:, -1:], caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, token, pos):
+    """One decode step. token: (B,1) int32; pos: scalar int32 (next index).
+
+    Caches mirror the segment structure; SWA caches are ring buffers
+    (write at pos % window)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"]["tok"].astype(dtype)[token]
+    x = constrain(x, "batch", None, "embed")
+    new_caches = []
+    for seg_p, seg_c, seg in zip(params["segments"], caches,
+                                 layer_plan(cfg)):
+        if seg.count == 1:
+            if seg.kind == "cross":
+                x, nc = B.block_decode_cross(seg_p, x, cfg, cache=seg_c,
+                                             pos=pos)
+            else:
+                x, nc = B.block_decode(seg_p, x, cfg, seg.kind,
+                                       cache=seg_c, pos=pos)
+            new_caches.append(nc)
+        else:
+            def body(x, inp):
+                p_l, c_l = inp
+                if seg.kind == "cross":
+                    xx, nc = B.block_decode_cross(p_l, x, cfg, cache=c_l,
+                                                  pos=pos)
+                else:
+                    xx, nc = B.block_decode(p_l, x, cfg, seg.kind,
+                                            cache=c_l, pos=pos)
+                return xx, nc
+            x, ncs = jax.lax.scan(body, x, (seg_p, seg_c))
+            new_caches.append(ncs)
+    x = B.rmsnorm(x, params["embed"]["ln_f"].astype(dtype), cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["embed"]["unembed"].astype(dtype))
+    return logits, new_caches
+
+
+# --------------------------------------------------------------------------
+# shape declarations (dry-run stand-ins; no allocation)
+# --------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    """ShapeDtypeStruct + logical-name trees for the decode caches."""
+    dtype = jnp.dtype(cfg.dtype)
+    shapes, names = [], []
+    for seg in layer_plan(cfg):
+        defs = B.cache_defs_for_kind(cfg, seg.kind, batch, seq)
+        sh: Dict[str, Any] = {}
+        nm: Dict[str, Any] = {}
+        for key, (shape, lnames) in defs.items():
+            dt = jnp.float32 if ("state" in key or "xprev" in key) else dtype
+            if seg.count > 1:
+                sh[key] = jax.ShapeDtypeStruct((seg.count,) + shape, dt)
+                nm[key] = ("layers",) + lnames
+            else:
+                sh[key] = jax.ShapeDtypeStruct(shape, dt)
+                nm[key] = lnames
+        shapes.append(sh)
+        names.append(nm)
+    return shapes, names
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Model inputs as ShapeDtypeStructs (+ logical names) for a cell.
+
+    Stub frontends (whisper frames / VLM patches) appear here as
+    precomputed embeddings, per the assignment.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+    ii = jnp.int32
+    specs: Dict[str, Any] = {}
+    names: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), ii)
+        names["tokens"] = ("batch", "seq")
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), dtype)
+            names["frames"] = ("batch", "enc_seq", "embed")
+        if cfg.family == "vlm":
+            specs["memory"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_seq, cfg.d_model), dtype)
+            names["memory"] = ("batch", "vision_seq", "embed")
+    else:  # decode: one new token against a seq-long cache
+        specs["token"] = jax.ShapeDtypeStruct((b, 1), ii)
+        names["token"] = ("batch", None)
+        specs["pos"] = jax.ShapeDtypeStruct((), ii)
+        names["pos"] = ()
+        cache_sh, cache_nm = cache_specs(cfg, b, s)
+        specs["caches"] = cache_sh
+        names["caches"] = cache_nm
+    return specs, names

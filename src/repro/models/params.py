@@ -1,0 +1,72 @@
+"""Parameter declaration system: shapes + logical sharding names + init.
+
+Every parameter is declared once as a ``PD(shape, names, scale)``; the same
+tree drives (a) random init, (b) ``ShapeDtypeStruct`` construction for the
+dry-run (no allocation), and (c) NamedSharding resolution via the logical
+rules in ``sharding.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PD", "init_params", "shape_tree", "names_tree", "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PD:
+    """Parameter definition: shape, logical axis names, init scale."""
+
+    shape: Tuple[int, ...]
+    names: Tuple[Optional[str], ...]
+    scale: float = 1.0
+    init: str = "normal"        # normal | zeros | ones
+    dtype: Optional[str] = None  # override param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.names), (self.shape, self.names)
+
+
+def _is_pd(x):
+    return isinstance(x, PD)
+
+
+def init_params(rng: jax.Array, defs, param_dtype: str = "float32"):
+    """Materialize a PD tree into a parameter tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_pd)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        dt = jnp.dtype(d.dtype or param_dtype)
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            fan_in = d.shape[0] if d.shape else 1
+            std = d.scale / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, d.shape, jnp.float32)
+                        * std).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def shape_tree(defs, param_dtype: str = "float32"):
+    """PD tree -> ShapeDtypeStruct tree (dry-run, no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape,
+                                       jnp.dtype(d.dtype or param_dtype)),
+        defs, is_leaf=_is_pd)
+
+
+def names_tree(defs):
+    return jax.tree_util.tree_map(lambda d: d.names, defs, is_leaf=_is_pd)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=_is_pd)
+    return int(sum(int(np.prod(d.shape)) for d in leaves))

@@ -1,0 +1,160 @@
+"""Logical-axis sharding rules with a divisibility-aware planner.
+
+MaxText-style: every tensor dimension carries a logical name; rules map
+names to mesh axes; the planner drops a mapping whenever the dimension is
+not divisible by the mesh-axis extent (e.g. qwen2's 8 KV heads cannot
+shard over a 16-way 'model' axis — the KV *cache sequence* axis picks up
+the sharding instead via the 'cache_seq' fallback rule).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AxisRules", "DEFAULT_RULES", "spec_for", "sharding_for",
+           "tree_shardings", "mesh_axis_size"]
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+AxisRules = Dict[str, AxisVal]
+
+# Logical-axis vocabulary used across the model zoo.
+DEFAULT_RULES: AxisRules = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp_act": "model",
+    "cache_seq": None,       # fallback target when kv_heads won't shard
+    "vision_seq": None,
+    "enc_seq": None,
+    # parameters (FSDP over 'data', TP over 'model')
+    "p_embed": "data",
+    "vocab": "model",
+    "p_heads": "model",
+    "p_kv_heads": "model",
+    "p_head_dim": None,
+    "p_mlp": "model",
+    "experts": "model",
+    "p_expert_mlp": "model",      # fallback TP when experts don't divide
+    "expert_cap": "data",         # MoE capacity dim (2D dispatch lever)
+    "ssm_state": None,
+    "layers": None,
+    # optimizer / scalars
+    "none": None,
+}
+
+# Sequence-parallel override used for the 500k-context SSM path.
+SP_RULES: AxisRules = dict(DEFAULT_RULES, seq="model", cache_seq="model")
+
+
+def mesh_axis_size(mesh: Mesh, axes: AxisVal) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def _present(mesh: Mesh, axes: AxisVal) -> AxisVal:
+    """Drop mesh axes that don't exist on this mesh (e.g. 'pod' on 2D)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.shape else None
+    kept = tuple(a for a in axes if a in mesh.shape)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def spec_for(mesh: Mesh, logical: Sequence[Optional[str]],
+             shape: Sequence[int],
+             rules: Optional[AxisRules] = None) -> P:
+    """Resolve logical dim names -> PartitionSpec, enforcing divisibility.
+
+    A mesh axis may be consumed by at most one tensor dimension; when a
+    dimension's size is not divisible by its rule's extent the dimension
+    falls back to replication (and the freed axis stays available for a
+    later dimension such as 'cache_seq').
+    """
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    out = []
+    for name, dim in zip(logical, shape):
+        axes = _present(mesh, rules.get(name)) if name else None
+        if axes is None:
+            out.append(None)
+            continue
+        tup = (axes,) if isinstance(axes, str) else tuple(axes)
+        if any(a in used for a in tup):
+            out.append(None)
+            continue
+        ext = mesh_axis_size(mesh, tup)
+        if ext <= 1 or dim % ext != 0:
+            out.append(None)
+            continue
+        used.update(tup)
+        out.append(axes)
+    return P(*out)
+
+
+def sharding_for(mesh: Mesh, logical: Sequence[Optional[str]],
+                 shape: Sequence[int],
+                 rules: Optional[AxisRules] = None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, logical, shape, rules))
+
+
+import contextlib
+import threading
+
+_ACTIVE = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: Optional[AxisRules] = None):
+    """Enable logical activation-sharding constraints during tracing.
+
+    The step builders (launch/steps.py) enter this around ``.lower()`` /
+    execution so that ``constrain`` calls inside model code resolve against
+    the actual mesh. Without these constraints GSPMD loses batch sharding
+    through scan bodies (observed: replicated layer activations => 62
+    GB/chip of spurious all-reduce in the starcoder train cell).
+    """
+    prev = getattr(_ACTIVE, "ctx", None)
+    _ACTIVE.ctx = (mesh, rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _ACTIVE.ctx = prev
+
+
+def constrain(x, *names: Optional[str], rules: Optional[AxisRules] = None):
+    """Logical-axis sharding constraint; no-op outside activation_sharding
+    (plain CPU unit tests)."""
+    ctx = getattr(_ACTIVE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, default_rules = ctx
+    spec = spec_for(mesh, names, x.shape, rules or default_rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(mesh: Mesh, shapes_tree, logical_tree,
+                   rules: Optional[AxisRules] = None):
+    """Map a pytree of ShapeDtypeStructs + logical-name tuples to
+    NamedShardings."""
+    def one(sds, names):
+        return sharding_for(mesh, names, sds.shape, rules)
+    return jax.tree_util.tree_map(
+        one, shapes_tree, logical_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,8 @@
+"""Optimizer substrate (pure-JAX, optax-free)."""
+
+from .adamw import (AdamWConfig, adamw_init, adamw_update, global_norm,
+                    opt_state_specs)
+from .schedule import cosine_schedule
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "opt_state_specs", "cosine_schedule"]

@@ -1,0 +1,8 @@
+"""Roofline analysis: 3-term model from the compiled dry-run artifact."""
+
+from .hlo import collective_bytes_from_hlo, parse_collectives
+from .model import (HW, RooflineReport, analyze_compiled, model_flops,
+                    roofline_terms)
+
+__all__ = ["HW", "RooflineReport", "analyze_compiled", "roofline_terms",
+           "model_flops", "collective_bytes_from_hlo", "parse_collectives"]

@@ -1,0 +1,139 @@
+"""Parse collective ops + wire bytes out of post-SPMD optimized HLO text.
+
+``compiled.as_text()`` (after GSPMD partitioning) contains per-device
+shapes; we extract every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, its shard shape and its replica-group
+size, and convert to *wire bytes per chip* with ring-algorithm costs:
+
+  all-reduce      : 2 * N * (g-1)/g      (reduce-scatter + all-gather)
+  all-gather      : O * (g-1)            (operand forwarded g-1 times)
+  reduce-scatter  : N * (g-1)/g
+  all-to-all      : N * (g-1)/g
+  collective-permute : N                 (one hop)
+
+where N is the per-device tensor bytes appearing in the op and g the
+replica-group size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+__all__ = ["parse_collectives", "collective_bytes_from_hlo", "CollectiveOp"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_OP_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    shard_bytes: int          # per-device tensor bytes in the op
+    group_size: int
+    wire_bytes_per_chip: float
+    line: str = ""
+
+
+def _shape_bytes(type_str: str) -> int:
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    if dt == "tuple":
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of the op's result (sum over tuple elements)."""
+    m = re.search(r"=\s+(\([^)]*\)|\S+\[[\d,]*\](?:\{[^}]*\})?)\s", line)
+    if not m:
+        return 0
+    t = m.group(1)
+    if t.startswith("("):
+        return sum(_shape_bytes(x) for x in re.findall(r"\w+\[[\d,]*\]", t))
+    return _shape_bytes(t)
+
+
+def _group_size(line: str, kind: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        g0, g1, total = int(m.group(1)), int(m.group(2)), int(m.group(3))
+        # iota groups [a,b]<=[n]: groups of size b (the minor dimension)
+        return max(g1, 1)
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        body = m.group(1).strip()
+        if not body:
+            return 1
+        return body.count(",") + 1
+    if kind == "collective-permute":
+        return 2
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if not ls or ls.startswith("//"):
+            continue
+        matched = None
+        for kind in _OP_KINDS:
+            # op name appears as " kind(" in HLO (e.g. "all-reduce(")
+            if f" {kind}(" in ls or f"{kind}-start(" in ls:
+                matched = kind
+                break
+        if not matched:
+            continue
+        if f"{matched}-done" in ls:
+            continue  # avoid double counting async pairs
+        n = _result_bytes(ls)
+        g = _group_size(ls, matched)
+        if matched == "all-reduce":
+            wire = 2.0 * n * (g - 1) / max(g, 1)
+        elif matched == "all-gather":
+            # result is the gathered tensor; each chip forwards its shard
+            # (result/g) g-1 times
+            wire = (n / max(g, 1)) * (g - 1)
+        elif matched == "reduce-scatter":
+            # operand = result * g; each chip sends operand*(g-1)/g = result*(g-1)
+            wire = float(n) * (g - 1)
+        elif matched == "all-to-all":
+            wire = float(n) * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            wire = float(n)
+        ops.append(CollectiveOp(kind=matched, shard_bytes=n, group_size=g,
+                                wire_bytes_per_chip=wire, line=ls[:160]))
+    return ops
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Aggregate wire bytes per chip, by op kind + total."""
+    out: Dict[str, float] = {k: 0.0 for k in _OP_KINDS}
+    count: Dict[str, int] = {k: 0 for k in _OP_KINDS}
+    for op in parse_collectives(hlo_text):
+        out[op.kind] += op.wire_bytes_per_chip
+        count[op.kind] += 1
+    total = sum(out.values())
+    res = {f"bytes.{k}": v for k, v in out.items()}
+    res.update({f"count.{k}": float(v) for k, v in count.items()})
+    res["bytes.total"] = total
+    return res

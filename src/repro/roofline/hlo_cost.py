@@ -1,0 +1,248 @@
+"""Execution-count-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a while loop
+(lax.scan over 88 layers, or an RWKV time scan) contributes a single body
+execution, so FLOPs / bytes / collective counts are understated by the
+trip count. The optimized HLO text, however, carries
+``backend_config={"known_trip_count":{"n":...}}`` on each while op.
+
+This module parses the post-SPMD optimized HLO into computations, builds
+the call graph (while bodies/conditions, fusions, to_apply), propagates
+execution-count multipliers from ENTRY, and accumulates:
+
+  * dot FLOPs        (2 * prod(result dims) * prod(contracting dims)),
+    attributed through fusions,
+  * HBM bytes        (operands + results of non-fusion-internal ops —
+    fusion internals never round-trip HBM),
+  * collective wire bytes (ring-cost formulas, see hlo.py),
+
+all scaled by the computation's execution count. Shapes in post-SPMD HLO
+are per-device, so every figure is per-chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo_text", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_TYPE_RE = re.compile(r"^(\([^)]*\)|[\w\[\],\s]+?\[[\d,]*\](?:\{[^}]*\})?)\s+(\S+?)\(")
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"(?:true_computation|false_computation|branch_computations=\{[^}]*)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes_from_type(t: str) -> int:
+    total = 0
+    for m in _SHAPE_TOKEN.finditer(t):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(t: str) -> Optional[List[int]]:
+    m = _SHAPE_TOKEN.search(t)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    type_str: str
+    rest: str
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    wire_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_count: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+
+def _parse_computations(text: str):
+    comps: Dict[str, List[_Op]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        tm = _TYPE_RE.match(rhs)
+        if not tm:
+            # tuple-typed or oddly formatted; try a looser parse
+            sp = rhs.split(" ", 1)
+            comps[cur].append(_Op(name, "unknown", sp[0],
+                                  sp[1] if len(sp) > 1 else ""))
+            continue
+        comps[cur].append(_Op(name, tm.group(2), tm.group(1), rhs))
+    return comps, entry
+
+
+def _group_size(rest: str) -> int:
+    m = _IOTA_GROUPS_RE.search(rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _LIST_GROUPS_RE.search(rest)
+    if m:
+        body = m.group(1).strip()
+        return body.count(",") + 1 if body else 1
+    return 2
+
+
+def analyze_hlo_text(text: str) -> HloCost:
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        entry = next(iter(comps), None)
+        if entry is None:
+            return HloCost()
+
+    # ---- call graph with execution-count multipliers ----------------------
+    mult: Dict[str, float] = defaultdict(float)
+    fusion_internal: Dict[str, bool] = defaultdict(bool)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        cmult = mult[cname]
+        for op in comps.get(cname, []):
+            rest = op.rest
+            if op.opcode == "while" or " while(" in rest:
+                trip = 1.0
+                tm = _TRIP_RE.search(rest)
+                if tm:
+                    trip = float(tm.group(1))
+                for rx, extra in ((_BODY_RE, trip), (_COND_RE, trip + 1)):
+                    m = rx.search(rest)
+                    if m and m.group(1) in comps:
+                        mult[m.group(1)] += cmult * extra
+                        if m.group(1) not in seen:
+                            seen.add(m.group(1))
+                            order.append(m.group(1))
+                continue
+            m = _CALLS_RE.search(rest)
+            if m and m.group(1) in comps:
+                callee = m.group(1)
+                mult[callee] += cmult
+                fusion_internal[callee] = True  # fusion: no HBM round-trip
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+            m = _APPLY_RE.search(rest)
+            if m and m.group(1) in comps:
+                callee = m.group(1)
+                mult[callee] += 0.0   # reduction lambdas: negligible
+                fusion_internal[callee] = True
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    # ---- accumulate costs --------------------------------------------------
+    cost = HloCost()
+    for cname, ops in comps.items():
+        cmult = mult.get(cname, 0.0)
+        if cmult <= 0.0:
+            continue
+        table = {op.name: op.type_str for op in ops}
+        for op in ops:
+            rest = op.rest
+            # FLOPs: dots anywhere (incl. fusion internals)
+            if op.opcode in ("dot", "dot-general") or rest.startswith("dot("):
+                res_dims = _shape_dims(op.type_str) or []
+                flops = 2.0
+                for d in res_dims:
+                    flops *= d
+                mc = _LHS_CONTRACT.search(rest)
+                lhs_ref = _OPERAND_RE.search(rest[rest.find("("):])
+                if mc and lhs_ref and lhs_ref.group(1) in table:
+                    lhs_dims = _shape_dims(table[lhs_ref.group(1)]) or []
+                    for idx in (mc.group(1).split(",") if mc.group(1)
+                                else []):
+                        ii = int(idx)
+                        if ii < len(lhs_dims):
+                            flops *= lhs_dims[ii]
+                cost.flops += flops * cmult
+            if fusion_internal.get(cname):
+                continue
+            # HBM bytes: result + operands for top-level ops
+            if op.opcode in ("parameter", "constant", "get-tuple-element",
+                             "tuple", "bitcast"):
+                continue
+            nbytes = _shape_bytes_from_type(op.type_str)
+            args_part = rest[rest.find("("):rest.find(")") + 1]
+            for ref in _OPERAND_RE.finditer(args_part):
+                t = table.get(ref.group(1))
+                if t:
+                    nbytes += _shape_bytes_from_type(t)
+            cost.hbm_bytes += nbytes * cmult
+            # collectives
+            for kind in _COLL_KINDS:
+                if op.opcode in (kind, f"{kind}-start"):
+                    n = _shape_bytes_from_type(op.type_str)
+                    g = _group_size(rest)
+                    if kind == "all-reduce":
+                        wire = 2.0 * n * (g - 1) / max(g, 1)
+                    elif kind == "all-gather":
+                        wire = (n / max(g, 1)) * (g - 1)
+                    elif kind == "reduce-scatter":
+                        wire = float(n) * (g - 1)
+                    elif kind == "all-to-all":
+                        wire = float(n) * (g - 1) / max(g, 1)
+                    else:
+                        wire = float(n)
+                    cost.wire_bytes += wire * cmult
+                    cost.wire_by_kind[kind] += wire * cmult
+                    cost.coll_count[kind] += cmult
+                    break
+    return cost

@@ -1,0 +1,105 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Per-op collective inspector — the §Perf diagnostic tool.
+
+Compiles one (arch x shape x mesh) cell and prints the top-N collectives
+by execution-count-weighted wire bytes, so a hillclimb iteration can see
+exactly WHICH tensor crosses the wire and from which computation (e.g.
+the MoE dispatch-buffer gradient all-reduces of EXPERIMENTS.md [M2/M3]).
+
+  PYTHONPATH=src python -m repro.roofline.inspect \
+      --arch mixtral-8x22b --shape train_4k --opt moe2d --top 12
+"""
+
+import argparse
+from collections import defaultdict
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--impl", default=None)
+    ap.add_argument("--opt", default="")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    from ..configs import SHAPES, get_config
+    from ..launch import steps as S
+    from ..launch.dryrun import apply_opts
+    from ..launch.mesh import make_production_mesh
+    from . import hlo_cost as m
+
+    cfg = apply_opts(get_config(args.arch), args.opt)
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    with mesh:
+        bundle = S.build_step(cfg, mesh, SHAPES[args.shape], impl=args.impl)
+        text = bundle.lower().compile().as_text()
+
+    comps, entry = m._parse_computations(text)
+    mult = defaultdict(float)
+    fusion_internal = defaultdict(bool)
+    mult[entry] = 1.0
+    order, seen, i = [entry], {entry}, 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        cmult = mult[cname]
+        for op in comps.get(cname, []):
+            rest = op.rest
+            if op.opcode == "while" or " while(" in rest:
+                trip = 1.0
+                tm = m._TRIP_RE.search(rest)
+                if tm:
+                    trip = float(tm.group(1))
+                for rx, extra in ((m._BODY_RE, trip), (m._COND_RE, trip + 1)):
+                    mm = rx.search(rest)
+                    if mm and mm.group(1) in comps:
+                        mult[mm.group(1)] += cmult * extra
+                        if mm.group(1) not in seen:
+                            seen.add(mm.group(1))
+                            order.append(mm.group(1))
+                continue
+            mm = m._CALLS_RE.search(rest)
+            if mm and mm.group(1) in comps:
+                c2 = mm.group(1)
+                mult[c2] += cmult
+                fusion_internal[c2] = True
+                if c2 not in seen:
+                    seen.add(c2)
+                    order.append(c2)
+
+    rows = []
+    wire_fns = {
+        "all-reduce": lambda n, g: 2.0 * n * (g - 1) / max(g, 1),
+        "all-gather": lambda n, g: (n / max(g, 1)) * (g - 1),
+        "reduce-scatter": lambda n, g: float(n) * (g - 1),
+        "all-to-all": lambda n, g: float(n) * (g - 1) / max(g, 1),
+        "collective-permute": lambda n, g: float(n),
+    }
+    for cname, ops in comps.items():
+        cm = mult.get(cname, 0.0)
+        if cm <= 0 or fusion_internal.get(cname):
+            continue
+        for op in ops:
+            for kind, fn in wire_fns.items():
+                if op.opcode in (kind, f"{kind}-start"):
+                    n = m._shape_bytes_from_type(op.type_str)
+                    g = m._group_size(op.rest)
+                    rows.append((fn(n, g) * cm, cm, kind, g,
+                                 op.type_str[:64], cname[:44]))
+                    break
+    rows.sort(key=lambda x: -x[0])
+    print(f"# top collectives: {args.arch} x {args.shape} x {args.mesh} "
+          f"impl={args.impl or 'scan'} opt={args.opt or '-'}")
+    print("wire_total,exec_count,kind,group,shard_type,computation")
+    for w, cm, kind, g, t, cn in rows[:args.top]:
+        print(f"{w / 1e9:10.2f}GB x{cm:6.0f} {kind:18s} g={g:4d} {t:64s} "
+              f"{cn}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Test helpers. Multi-device tests run in a subprocess so that
+XLA_FLAGS=--xla_force_host_platform_device_count is never set globally
+(plain tests must see 1 device)."""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 600) -> str:
+    """Run a python snippet in a fresh process with N host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:{out.stdout}\nSTDERR:{out.stderr}")
+    return out.stdout

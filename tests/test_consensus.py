@@ -1,0 +1,36 @@
+"""Consensus stream models (§6.4 heterogeneous RSM case study)."""
+
+import pytest
+
+from repro.consensus import (AlgorandModel, FileModel, PBFTModel, RaftModel,
+                             coupled_throughput)
+from repro.core.types import RSMConfig
+
+
+def test_baseline_rates_match_paper():
+    assert PBFTModel().commit_rate == 39_000
+    assert RaftModel().commit_rate == 39_000
+    assert AlgorandModel().commit_rate == 130
+    assert FileModel().commit_rate == float("inf")
+
+
+def test_coupling_overhead_below_15_percent():
+    """Paper: < 15% RSM throughput decrease in the worst case when PICSOU
+    is attached and C3B keeps pace."""
+    for model in (PBFTModel(), RaftModel(), AlgorandModel()):
+        base = model.commit_rate
+        with_c3b = coupled_throughput(base, c3b_rate=base * 10)
+        assert with_c3b >= 0.85 * base
+
+
+def test_slow_fast_coupling():
+    """Algorand (130/s) must be able to feed Raft (39k/s): the pair runs at
+    the slower RSM's rate, not at zero."""
+    out = coupled_throughput(AlgorandModel().commit_rate,
+                             c3b_rate=RaftModel().commit_rate)
+    assert out == pytest.approx(130 * 0.98)
+
+
+def test_cert_bytes():
+    cfg = RSMConfig.bft(1)
+    assert PBFTModel().cert_bytes(cfg) > RaftModel().cert_bytes(cfg)

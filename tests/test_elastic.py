@@ -1,0 +1,27 @@
+"""Elastic scaling plans."""
+
+import numpy as np
+
+from repro.launch.elastic import replan_membership, replan_quotas
+
+
+def test_pod_loss_replans_mesh():
+    plan = replan_membership([0, 1], hosts_per_pod=4, data_parallel=16,
+                             model_parallel=16, last_committed_step=100)
+    assert plan.mesh_shape == (2, 16, 16)
+    plan = replan_membership([1], hosts_per_pod=4, data_parallel=16,
+                             model_parallel=16, last_committed_step=100)
+    assert plan.mesh_shape == (16, 16)
+    assert plan.restore_step == 100
+
+
+def test_quota_replanning_tracks_throughput():
+    q = replan_quotas(np.array([4.0, 2.0, 1.0, 1.0]), quantum=16)
+    assert q[0] == 8 and q[1] == 4 and q[2] == 2 and q[3] == 2
+
+
+def test_quota_lcm_rescaling():
+    # incommensurate pod totals: quotas still integral and proportional
+    q = replan_quotas(np.array([3.0, 1.0]), quantum=8, peer_total_stake=12)
+    assert sum(q.values()) == 8
+    assert q[0] == 6

@@ -1,0 +1,110 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, quack_scan, rwkv6_chunked
+from repro.kernels.ref import (mha_reference, quack_reference,
+                               rwkv6_reference)
+
+RNG = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("b,h,kv,sq,skv,d", [
+    (2, 4, 2, 128, 128, 64),
+    (1, 4, 4, 256, 256, 32),
+    (2, 4, 1, 128, 256, 64),     # MQA + longer kv (prefill w/ cache)
+    (1, 8, 2, 64, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, kv, sq, skv, d, dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kv, skv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kv, skv, d), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    ref = mha_reference(q, k, v, causal=True)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_window_and_noncausal(window, causal):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64))
+    k = jax.random.normal(ks[1], (1, 2, 128, 64))
+    v = jax.random.normal(ks[2], (1, 2, 128, 64))
+    w = window if causal else 0
+    out = flash_attention(q, k, v, causal=causal, window=w,
+                          block_q=64, block_kv=64)
+    ref = mha_reference(q, k, v, causal=causal, window=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-6,
+                               rtol=2e-6)
+
+
+@pytest.mark.parametrize("b,h,t,d,chunk", [
+    (2, 2, 64, 32, 16),
+    (1, 4, 128, 64, 64),
+    (2, 1, 256, 16, 128),
+    (1, 2, 64, 64, 64),          # single chunk
+])
+def test_rwkv6_chunked_sweep(b, h, t, d, chunk):
+    ks = jax.random.split(RNG, 5)
+    r = jax.random.normal(ks[0], (b, h, t, d)) * 0.5
+    k = jax.random.normal(ks[1], (b, h, t, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, t, d)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, t, d))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (h, d)) * 0.5
+    y = rwkv6_chunked(r, k, v, w, u, chunk=chunk)
+    yref, _ = rwkv6_reference(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_rwkv6_bf16_inputs():
+    ks = jax.random.split(RNG, 5)
+    shp = (1, 2, 64, 32)
+    r, k, v = (jax.random.normal(ks[i], shp).astype(jnp.bfloat16)
+               for i in range(3))
+    w = (jax.nn.sigmoid(jax.random.normal(ks[3], shp)) * 0.5
+         + 0.45).astype(jnp.bfloat16)
+    u = jax.random.normal(ks[4], (2, 32)).astype(jnp.bfloat16)
+    y = rwkv6_chunked(r, k, v, w, u, chunk=32)
+    yref, _ = rwkv6_reference(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yref, np.float32), atol=0.15,
+                               rtol=0.15)
+
+
+@pytest.mark.parametrize("s,r,w,bw", [
+    (3, 7, 64, 32),
+    (2, 16, 512, 512),
+    (4, 5, 128, 64),
+    (1, 33, 256, 128),
+])
+def test_quack_scan_sweep(s, r, w, bw):
+    ks = jax.random.split(jax.random.PRNGKey(s), 3)
+    claims = jax.random.bernoulli(ks[0], 0.6, (s, r, w))
+    comps = jax.random.bernoulli(ks[1], 0.2, (s, r, w))
+    stakes = jnp.abs(jax.random.normal(ks[2], (r,))) + 0.5
+    qk, lk, pk = quack_scan(claims, comps, stakes, 3.0, 1.5, block_w=bw)
+    qr, lr, pr = quack_reference(claims, comps, stakes, 3.0, 1.5)
+    assert bool((qk == qr).all())
+    assert bool((lk == lr).all())
+    assert bool((pk == pr).all())
+
+
+def test_quack_scan_matches_protocol_semantics():
+    """Kernel quorum decisions == the simulator's quack primitive."""
+    from repro.core.quack import selective_quack
+    ks = jax.random.split(RNG, 2)
+    claims = jax.random.bernoulli(ks[0], 0.5, (2, 4, 64))
+    stakes = jnp.ones(4)
+    q, _, _ = quack_scan(claims, jnp.zeros_like(claims), stakes, 2.0, 2.0)
+    q2 = selective_quack(claims, stakes, 2.0)
+    assert bool((q == q2).all())

@@ -1,0 +1,178 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + finite values; prefill/decode consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_configs, shape_applicable
+from repro.models import (decode_step, forward, init_model, loss_fn,
+                          prefill)
+from repro.models.model import encode
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+ARCHS = list_configs()
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b, s):
+    batch = {"tokens": jax.random.randint(RNG, (b, s), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            RNG, (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["memory"] = jax.random.normal(
+            RNG, (b, cfg.vision_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).smoke()
+    params = init_model(cfg, RNG)
+    b, s = 2, 32
+    batch = _batch(cfg, b, s)
+    memory = batch.get("memory")
+    if cfg.family == "encdec":
+        memory = encode(params, cfg, batch["frames"])
+    logits, aux = forward(params, cfg, batch["tokens"], memory=memory)
+    assert logits.shape == (b, s, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = get_config(arch).smoke()
+    params = init_model(cfg, RNG)
+    opt = adamw_init(params)
+    batch = _batch(cfg, 2, 32)
+
+    @jax.jit
+    def step(p, o, b):
+        (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(p, cfg, b)
+        p, o = adamw_update(AdamWConfig(), g, p, o)
+        return p, o, loss
+
+    params2, opt2, loss = step(params, opt, batch)
+    assert bool(jnp.isfinite(loss))
+    # parameters actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        params, params2)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    cfg = get_config(arch).smoke()
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = init_model(cfg, RNG)
+    b, s = 2, 16
+    batch = _batch(cfg, b, s + 2)
+    tokens = batch["tokens"]
+    memory = batch.get("memory")
+    mem_fwd = (encode(params, cfg, batch["frames"])
+               if cfg.family == "encdec" else memory)
+    full, _ = forward(params, cfg, tokens, memory=mem_fwd)
+    last, caches = prefill(params, cfg, tokens[:, :s],
+                           memory=(batch.get("frames")
+                                   if cfg.family == "encdec" else memory),
+                           cache_len=s + 2)
+    np.testing.assert_allclose(np.asarray(last[:, 0], np.float32),
+                               np.asarray(full[:, s - 1], np.float32),
+                               atol=2e-2, rtol=2e-2)
+    d1, caches = decode_step(params, cfg, caches, tokens[:, s:s + 1],
+                             jnp.int32(s))
+    d2, _ = decode_step(params, cfg, caches, tokens[:, s + 1:s + 2],
+                        jnp.int32(s + 1))
+    np.testing.assert_allclose(np.asarray(d1[:, 0], np.float32),
+                               np.asarray(full[:, s], np.float32),
+                               atol=2e-2, rtol=2e-2)
+    np.testing.assert_allclose(np.asarray(d2[:, 0], np.float32),
+                               np.asarray(full[:, s + 1], np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_shape_applicability_matrix():
+    """long_500k only for sub-quadratic archs (DESIGN.md table)."""
+    expect_runs = {"hymba-1.5b", "mixtral-8x22b", "rwkv6-7b"}
+    runs = {a for a in ARCHS
+            if shape_applicable(get_config(a), SHAPES["long_500k"])[0]}
+    assert runs == expect_runs
+
+
+def test_param_counts_in_range():
+    """Full configs land near their nameplate sizes.
+
+    granite/starcoder run ~30-40% above nameplate because the framework
+    uses SwiGLU MLPs uniformly where those originals use 2-matrix MLPs
+    (DESIGN.md hardware-adaptation notes); bounds are sanity checks
+    against order-of-magnitude config errors, not bit-exact replication.
+    """
+    expected = {
+        "granite-34b": (30e9, 50e9),
+        "qwen2-72b": (65e9, 80e9),
+        "granite-8b": (7e9, 10e9),
+        "starcoder2-3b": (2.5e9, 4.8e9),
+        "hymba-1.5b": (1.0e9, 2.2e9),
+        "deepseek-moe-16b": (14e9, 20e9),
+        "mixtral-8x22b": (120e9, 150e9),
+        "rwkv6-7b": (6e9, 9.5e9),
+        "whisper-small": (0.15e9, 0.4e9),
+        "llama-3.2-vision-11b": (8e9, 13e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, f"{arch}: {n / 1e9:.2f}B not in [{lo / 1e9}" \
+                              f", {hi / 1e9}]B"
+
+
+def test_moe_dense_matches_scatter():
+    """§Perf lever: dense dispatch must be numerically identical to the
+    scatter path (at high capacity factor)."""
+    cfg_s = dataclasses.replace(get_config("mixtral-8x22b").smoke(),
+                                capacity_factor=8.0)
+    cfg_d = dataclasses.replace(cfg_s, moe_impl="dense")
+    params = init_model(cfg_s, RNG)
+    tokens = jax.random.randint(RNG, (2, 32), 0, cfg_s.vocab)
+    a, _ = forward(params, cfg_s, tokens)
+    b, _ = forward(params, cfg_d, tokens)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=1e-4)
+
+
+def test_rwkv_blocked_scan_matches_baseline():
+    """§Perf lever: blocked recurrence == per-step recurrence."""
+    cfg1 = get_config("rwkv6-7b").smoke()
+    cfg2 = dataclasses.replace(cfg1, rwkv_scan_block=8)
+    params = init_model(cfg1, RNG)
+    tokens = jax.random.randint(RNG, (2, 32), 0, cfg1.vocab)
+    a, _ = forward(params, cfg1, tokens)
+    b, _ = forward(params, cfg2, tokens)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_hybrid_blocked_scan_matches_baseline():
+    cfg1 = get_config("hymba-1.5b").smoke()
+    cfg2 = dataclasses.replace(cfg1, rwkv_scan_block=8)
+    params = init_model(cfg1, RNG)
+    tokens = jax.random.randint(RNG, (2, 32), 0, cfg1.vocab)
+    a, _ = forward(params, cfg1, tokens)
+    b, _ = forward(params, cfg2, tokens)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_triangular_matches_scan_attention():
+    """§Perf lever: triangular causal attention == masked-scan attention."""
+    cfg = get_config("granite-8b").smoke()
+    params = init_model(cfg, RNG)
+    tokens = jax.random.randint(RNG, (2, 32), 0, cfg.vocab)
+    a, _ = forward(params, cfg, tokens, impl="scan")
+    b, _ = forward(params, cfg, tokens, impl="triangular")
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=1e-4)

@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) for the C3B invariants (§2.2).
+
+Random RSM sizes, stake vectors, failure placements (within the UpRight
+model: <= u failures of any kind, <= r of them byzantine) must preserve:
+
+* Eventual delivery — every transmitted message reaches >= 1 correct
+  replica of the receiver RSM;
+* Integrity-adjacent invariant — a QUACK forms only when replicas holding
+  >= u_r+1 stake have claimed the prefix (so >= 1 honest holder exists);
+* Lemma 1 — no message needs more than u_s + u_r + 1 retransmissions;
+* GC safety — the quacked prefix at any honest sender only grows.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FailureScenario, RSMConfig, SimConfig
+from repro.core.simulator import build_spec, run_simulation
+
+
+@st.composite
+def rsm_pair_with_failures(draw):
+    f_s = draw(st.integers(0, 1))
+    f_r = draw(st.integers(0, 1))
+    sender = RSMConfig.bft(max(f_s, 1))
+    receiver = RSMConfig.bft(max(f_r, 1))
+    # place at most u failures per side, at most r byzantine
+    crash_s = [-1] * sender.n
+    byz_recv = [False] * receiver.n
+    crash_r = [-1] * receiver.n
+    n_fail_s = draw(st.integers(0, sender.u))
+    n_fail_r = draw(st.integers(0, receiver.u))
+    for i in draw(st.permutations(range(sender.n)))[:n_fail_s]:
+        crash_s[i] = draw(st.integers(0, 8))
+    kinds = draw(st.lists(st.sampled_from(["crash", "byz_drop"]),
+                          min_size=n_fail_r, max_size=n_fail_r))
+    targets = draw(st.permutations(range(receiver.n)))[:n_fail_r]
+    for i, kind in zip(targets, kinds):
+        if kind == "crash":
+            crash_r[i] = draw(st.integers(0, 8))
+        else:
+            byz_recv[i] = True
+    fails = FailureScenario(crash_s=tuple(crash_s), crash_r=tuple(crash_r),
+                            byz_recv_drop=tuple(byz_recv))
+    return sender, receiver, fails
+
+
+@settings(max_examples=15, deadline=None)
+@given(rsm_pair_with_failures(), st.integers(0, 3))
+def test_eventual_delivery_and_lemma1(pair, seed):
+    sender, receiver, fails = pair
+    sim = SimConfig(n_msgs=12, steps=260, window=1, phi=6, seed=seed)
+    spec = build_spec(sender, receiver, sim, fails)
+    res = run_simulation(spec)
+    # Eventual delivery: every message reaches a correct receiver replica
+    assert (res.deliver_time >= 0).all(), res.deliver_time
+    # Lemma 1: retransmissions bounded by u_s + u_r + 1
+    honest_s = (np.asarray(spec.crash_s) < 0)
+    bound = sender.u + receiver.u + 1
+    assert res.retry[honest_s].max() <= bound
+    # GC safety: quacked prefix is monotone over rounds
+    mq = np.asarray(res.metrics.min_quack_prefix)
+    assert (np.diff(mq) >= 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 50), st.integers(0, 3))
+def test_quack_quorum_has_honest_holder(n, stake_scale, seed):
+    """Whenever a QUACK forms, replicas totalling >= u+1 stake claimed the
+    prefix — with <= u faulty stake, at least one claimant is honest."""
+    rng = np.random.RandomState(seed)
+    stakes = rng.randint(1, stake_scale + 1, size=n).astype(float)
+    total = stakes.sum()
+    u = (total - 1) // 3
+    import jax.numpy as jnp
+    from repro.core.quack import weighted_quorum_prefix
+    acks = jnp.asarray(rng.randint(0, 10, size=n))
+    prefix = int(weighted_quorum_prefix(acks, jnp.asarray(stakes), u + 1))
+    claimed = stakes[(np.asarray(acks) >= prefix)].sum() if prefix else 0
+    if prefix > 0:
+        assert claimed >= u + 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0.5, 1e6), min_size=2, max_size=10),
+       st.integers(1, 300))
+def test_apportionment_quota_rule(stakes, q):
+    from repro.core.scheduler import hamilton_apportion
+    c = hamilton_apportion(np.asarray(stakes), q)
+    sq = np.asarray(stakes) / np.sum(stakes) * q
+    assert c.sum() == q
+    assert np.all(c >= np.floor(sq) - 1e-9)
+    assert np.all(c <= np.ceil(sq) + 1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4))
+def test_lcm_scaling_makes_totals_equal(ts, tr):
+    from repro.core.types import lcm_scale_factors
+    psi_s, psi_r = lcm_scale_factors(ts * 7, tr * 11)
+    assert abs(ts * 7 * psi_s - tr * 11 * psi_r) < 1e-9

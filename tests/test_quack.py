@@ -1,0 +1,63 @@
+"""Unit tests for the QUACK primitives (§4.1, §5.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quack import (claim_bitmask, cumulative_ack,
+                              missing_below_horizon, selective_quack,
+                              weighted_quorum_prefix)
+
+
+def test_cumulative_ack_prefix():
+    r = jnp.array([[1, 1, 0, 1], [0, 1, 1, 1], [1, 1, 1, 1]], dtype=bool)
+    assert cumulative_ack(r).tolist() == [2, 0, 4]
+
+
+def test_missing_below_horizon_reports_gaps_only_below_top():
+    r = jnp.array([[1, 0, 1, 0, 0, 1, 0, 0]], dtype=bool)
+    miss = missing_below_horizon(r, phi=10)[0]
+    # top = 6 (highest received index 5); gaps below: 1, 3, 4
+    assert miss.tolist() == [False, True, False, True, True, False, False,
+                             False]
+
+
+def test_missing_below_horizon_phi_bound():
+    r = jnp.array([[1, 0, 0, 0, 0, 0, 0, 1]], dtype=bool)
+    miss = missing_below_horizon(r, phi=3)[0]
+    assert int(miss.sum()) == 3            # only the first phi gaps
+    assert miss.tolist()[:4] == [False, True, True, True]
+
+
+def test_claim_bitmask_matches_cum_and_phi():
+    r = jnp.array([[1, 1, 0, 1, 1, 0, 1, 0]], dtype=bool)
+    cum, claim, known = claim_bitmask(r, phi=1)
+    assert int(cum[0]) == 2
+    # horizon = 2nd gap = index 5: positions 0..4 described
+    assert claim[0, :5].tolist() == [True, True, False, True, True]
+    assert not bool(claim[0, 6])  # beyond horizon: not claimed
+
+
+def test_weighted_quorum_prefix_unit_stakes():
+    acks = jnp.array([5, 3, 7, 1])
+    stakes = jnp.ones(4)
+    # threshold 2 => 2nd largest ack = 5
+    assert int(weighted_quorum_prefix(acks, stakes, 2.0)) == 5
+    assert int(weighted_quorum_prefix(acks, stakes, 4.0)) == 1
+    assert int(weighted_quorum_prefix(acks, stakes, 5.0)) == 0  # no quorum
+
+
+def test_weighted_quorum_prefix_stakes():
+    acks = jnp.array([10, 2])
+    stakes = jnp.array([3.0, 1.0])
+    # stake-3 replica alone reaches threshold 3 => prefix 10
+    assert int(weighted_quorum_prefix(acks, stakes, 3.0)) == 10
+    # threshold 4 needs both => prefix 2
+    assert int(weighted_quorum_prefix(acks, stakes, 4.0)) == 2
+
+
+def test_selective_quack():
+    known = jnp.array([[[1, 0, 1], [1, 1, 0], [0, 1, 0]]], dtype=bool)
+    stakes = jnp.ones(3)
+    q = selective_quack(known, stakes, 2.0)[0]
+    assert q.tolist() == [True, True, False]

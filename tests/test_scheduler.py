@@ -1,0 +1,83 @@
+"""Scheduler tests — includes the paper's Figure 7 worked examples."""
+
+import numpy as np
+import pytest
+
+from repro.core.scheduler import (dss_sequence, hamilton_apportion,
+                                  lottery_sequence, round_robin_sequence,
+                                  sender_assignment, skewed_rr_sequence)
+
+
+def test_figure7_d1():
+    c = hamilton_apportion(np.array([25, 25, 25, 25.0]), 100)
+    assert c.tolist() == [25, 25, 25, 25]
+
+
+def test_figure7_d2():
+    c = hamilton_apportion(np.array([250, 250, 250, 250.0]), 100)
+    assert c.tolist() == [25, 25, 25, 25]
+
+
+def test_figure7_d3():
+    # stakes (214, 262, 262, 262), q=100 -> (22, 26, 26, 26) per the paper
+    c = hamilton_apportion(np.array([214, 262, 262, 262.0]), 100)
+    assert c.tolist() == [22, 26, 26, 26]
+    assert c.sum() == 100
+
+
+def test_figure7_d4():
+    c = hamilton_apportion(np.array([97, 1, 1, 1.0]), 10)
+    assert c.tolist() == [10, 0, 0, 0]
+
+
+def test_hamilton_quota_property():
+    """Hamilton satisfies the quota rule: floor(SQ) <= c <= ceil(SQ)."""
+    rng = np.random.RandomState(0)
+    for _ in range(50):
+        n = rng.randint(2, 12)
+        stakes = rng.uniform(0.1, 100, size=n)
+        q = rng.randint(1, 200)
+        c = hamilton_apportion(stakes, q)
+        sq = stakes / stakes.sum() * q
+        assert c.sum() == q
+        assert np.all(c >= np.floor(sq) - 1e-9)
+        assert np.all(c <= np.ceil(sq) + 1e-9)
+
+
+def test_dss_short_term_fairness():
+    """DSS (smooth interleave) spreads each node through the quantum —
+    the property lottery scheduling lacks (§5.2)."""
+    stakes = np.array([4.0, 4.0])
+    seq = dss_sequence(stakes, 8, 8)
+    # perfectly alternating halves: no node takes >2 consecutive slots
+    runs = []
+    run = 1
+    for a, b in zip(seq, seq[1:]):
+        run = run + 1 if a == b else 1
+        runs.append(run)
+    assert max(runs, default=1) <= 2
+
+
+def test_skewed_rr_serializes():
+    stakes = np.array([6.0, 1.0, 1.0])
+    seq = skewed_rr_sequence(stakes, 8)
+    # strawman V1: node 0 owns a contiguous block
+    assert seq[:6].tolist() == [0] * 6
+
+
+def test_lottery_long_run_fair():
+    stakes = np.array([3.0, 1.0])
+    seq = lottery_sequence(stakes, 20000, seed=1)
+    frac = (seq == 0).mean()
+    assert abs(frac - 0.75) < 0.02
+
+
+def test_round_robin():
+    assert round_robin_sequence(4, 8).tolist() == [0, 1, 2, 3, 0, 1, 2, 3]
+
+
+def test_sender_assignment_dispatch():
+    for sched in ("round_robin", "dss", "skewed_rr", "lottery"):
+        seq = sender_assignment(sched, np.ones(4), 16, quantum=8)
+        assert seq.shape == (16,)
+        assert seq.min() >= 0 and seq.max() < 4

@@ -1,0 +1,75 @@
+"""Sharding planner + small-mesh dry-run integration tests."""
+
+import pytest
+
+from helpers import run_py
+
+
+def test_spec_for_divisibility():
+    out = run_py("""
+from repro.launch.mesh import make_mesh
+from repro.models.sharding import spec_for, DEFAULT_RULES
+from jax.sharding import PartitionSpec as P
+mesh = make_mesh((2, 4), ('data', 'model'))
+# heads=8 divisible by model=4 -> sharded
+s = spec_for(mesh, ('batch','seq','heads','head_dim'), (8, 16, 8, 64))
+assert s == P('data', None, 'model', None), s
+# kv_heads=2 NOT divisible by 4 -> dropped
+s = spec_for(mesh, ('batch','seq','kv_heads','head_dim'), (8, 16, 2, 64))
+assert s == P('data', None, None, None), s
+# cache_seq fallback rule grabs model instead
+rules = dict(DEFAULT_RULES, cache_seq='model')
+s = spec_for(mesh, ('batch','cache_seq','kv_heads','head_dim'),
+             (8, 64, 2, 64), rules)
+assert s == P('data', 'model', None, None), s
+# axis used at most once: batch over (pod,data) on a 3D mesh
+mesh3 = make_mesh((2, 2, 2), ('pod','data','model'))
+s = spec_for(mesh3, ('batch','seq','embed'), (8, 16, 32))
+assert s == P(('pod','data'), None, None), s
+print('SHARDING-OK')
+""", devices=8)
+    assert "SHARDING-OK" in out
+
+
+def test_rules_for_kv_fallback():
+    out = run_py("""
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import rules_for
+from repro.configs import get_config
+mesh = make_mesh((2, 4), ('data', 'model'))
+r1 = rules_for(get_config('qwen2-72b'), mesh)      # kv=8 div by 4 -> no fb
+assert r1['cache_seq'] is None, r1['cache_seq']
+r2 = rules_for(get_config('hymba-1.5b'), mesh)     # kv=5 not div by 4
+assert r2['cache_seq'] == 'model'
+print('RULES-OK')
+""", devices=8)
+    assert "RULES-OK" in out
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("granite-8b", "train_4k"),
+    ("deepseek-moe-16b", "decode_32k"),
+    ("rwkv6-7b", "train_4k"),
+])
+def test_small_mesh_lower_compile(arch, shape):
+    """Reduced-config lower+compile on a (2,2,2) mesh + roofline parse."""
+    out = run_py(f"""
+import dataclasses
+from repro.configs import SHAPES, get_config
+from repro.launch import steps as S
+from repro.launch.mesh import make_mesh
+from repro.roofline import analyze_compiled
+
+cfg = dataclasses.replace(get_config('{arch}').smoke(), remat=True,
+                          dtype='bfloat16')
+sh = dataclasses.replace(SHAPES['{shape}'], seq_len=64, global_batch=4)
+mesh = make_mesh((2,2,2), ('pod','data','model'))
+with mesh:
+    b = S.build_step(cfg, mesh, sh)
+    compiled = b.lower().compile()
+    rep = analyze_compiled(compiled, cfg, sh, 'test', 8)
+assert rep.hlo_flops_per_chip > 0
+assert rep.hlo_bytes_per_chip > 0
+print('CELL-OK', rep.bottleneck)
+""", devices=8, timeout=420)
+    assert "CELL-OK" in out

@@ -1,0 +1,123 @@
+"""Simulator behaviour tests + JAX-vs-reference cross-checks."""
+
+import numpy as np
+import pytest
+
+from repro.core import (FailureScenario, RSMConfig, SimConfig, run_picsou)
+from repro.core.refsim import run_reference
+from repro.core.simulator import build_spec, run_simulation
+
+BFT1 = RSMConfig.bft(1)          # n=4, u=r=1
+CFT1 = RSMConfig.cft(1)          # n=3, u=1, r=0
+
+
+def _match(spec):
+    jr = run_simulation(spec)
+    rr = run_reference(spec)
+    for name in ("quack_time", "deliver_time", "retry", "recv_has"):
+        a, b = getattr(jr, name), getattr(rr, name)
+        assert np.array_equal(np.asarray(a), np.asarray(b)), name
+    return jr
+
+
+def test_failure_free_efficiency():
+    """P1: exactly one cross-RSM copy and n_r-1 intra copies per message."""
+    run = run_picsou(BFT1, BFT1, SimConfig(n_msgs=32, steps=40, window=2,
+                                           phi=8))
+    assert run.all_delivered and run.all_quacked
+    assert run.cross_copies_per_msg == 1.0
+    assert run.intra_copies_per_msg == BFT1.n - 1
+    assert run.resends_per_msg == 0.0
+
+
+def test_jax_matches_reference_failure_free():
+    _match(build_spec(BFT1, BFT1, SimConfig(n_msgs=24, steps=30, window=2,
+                                            phi=6)))
+
+
+def test_jax_matches_reference_crash():
+    spec = build_spec(BFT1, BFT1,
+                      SimConfig(n_msgs=24, steps=150, window=1, phi=6),
+                      FailureScenario(crash_s=(1, -1, -1, -1)))
+    jr = _match(spec)
+    assert (jr.deliver_time >= 0).all()
+
+
+def test_jax_matches_reference_byzantine():
+    spec = build_spec(BFT1, BFT1,
+                      SimConfig(n_msgs=24, steps=200, window=1, phi=6),
+                      FailureScenario(byz_recv_drop=(True, False, False,
+                                                     False),
+                                      byz_ack_low=(False, True, False,
+                                                   False)))
+    jr = _match(spec)
+    assert (jr.deliver_time >= 0).all()
+
+
+def test_crashed_sender_recovers_with_bounded_retries():
+    spec = build_spec(BFT1, BFT1,
+                      SimConfig(n_msgs=24, steps=240, window=1, phi=6),
+                      FailureScenario(crash_s=(2, -1, -1, -1),
+                                      byz_recv_drop=(True, False, False,
+                                                     False)))
+    jr = run_simulation(spec)
+    assert (jr.deliver_time >= 0).all()
+    honest = np.array([False, True, True, True])
+    assert jr.retry[honest].max() <= 3       # Lemma 1: u_s + u_r + 1
+
+
+def test_byzantine_liar_causes_no_spurious_resends():
+    """Robustness (P3): a single low-acking liar (r=1) cannot trigger
+    resends — duplicate QUACKs need r+1 distinct complainers."""
+    spec = build_spec(BFT1, BFT1,
+                      SimConfig(n_msgs=24, steps=150, window=1, phi=6),
+                      FailureScenario(byz_ack_low=(True, False, False,
+                                                   False)))
+    jr = run_simulation(spec)
+    assert int(jr.metrics.resends.sum()) == 0
+    assert (jr.deliver_time >= 0).all()
+
+
+def test_cft_single_dup_triggers_resend():
+    """In CFT mode (r=0) a single duplicate complaint suffices (§4.2)."""
+    spec = build_spec(CFT1, CFT1,
+                      SimConfig(n_msgs=12, steps=120, window=1, phi=6),
+                      FailureScenario(crash_s=(1, -1, -1)))
+    jr = run_simulation(spec)
+    assert (jr.deliver_time >= 0).all()
+    assert int(jr.metrics.resends.sum()) > 0
+
+
+def test_gc_stall_defence_progresses():
+    """§4.3: byzantine partial broadcast + colluding crash stalls the naive
+    protocol; highest-quacked metadata lets the stream progress."""
+    fail = FailureScenario(byz_bcast_partial=(True, False, False, False),
+                           bcast_limit=2, crash_r=(-1, 8, -1, -1))
+    spec = build_spec(BFT1, BFT1,
+                      SimConfig(n_msgs=24, steps=300, window=1, phi=6),
+                      fail)
+    jr = run_simulation(spec)
+    # failures exceed u_r here (model violated) so delivery of poisoned
+    # messages is excused — but the quack stream must NOT stall:
+    assert int(jr.metrics.min_quack_prefix[-1]) > 8
+
+
+def test_staked_dss_run():
+    ss = RSMConfig(n=4, u=333, r=333, stakes=(333., 223., 222., 222.))
+    rs = RSMConfig(n=4, u=333, r=333, stakes=(250., 250., 250., 250.))
+    spec = build_spec(ss, rs, SimConfig(n_msgs=24, steps=80, window=2,
+                                        phi=6, scheduler="dss", quantum=12))
+    jr = _match(spec)
+    assert (jr.deliver_time >= 0).all()
+
+
+def test_mixed_cft_bft():
+    """Generality (P2): a CFT RSM can talk to a BFT RSM."""
+    spec = build_spec(CFT1, BFT1, SimConfig(n_msgs=24, steps=60, window=2,
+                                            phi=6))
+    jr = run_simulation(spec)
+    assert (jr.deliver_time >= 0).all()
+    spec = build_spec(BFT1, CFT1, SimConfig(n_msgs=24, steps=60, window=2,
+                                            phi=6))
+    jr = run_simulation(spec)
+    assert (jr.deliver_time >= 0).all()
