@@ -1,0 +1,87 @@
+"""Dense vs sliding-window simulator core: wall-clock + state footprint.
+
+The dense path carries (n_s, n_r, M) per-message state through the whole
+``lax.scan`` — memory and compile time grow with stream length M. The
+windowed path (GC-driven ring buffers, §4.3) keeps O(W) state regardless
+of M. This bench sweeps M in {256, 4096, 65536} and reports, per path,
+the first-call wall time (includes compile), steady-state wall time, and
+the scan-state footprint in bytes.
+
+  PYTHONPATH=src python -m benchmarks.bench_windowed [--dense-max N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core import RSMConfig, SimConfig
+from repro.core.simulator import build_spec, run_simulation
+
+SIZES = (256, 4096, 65536)
+SENDER = RSMConfig.bft(1)
+RECEIVER = RSMConfig.bft(1)
+SEND_WINDOW = 4
+
+
+def _sim(m: int, windowed: bool) -> SimConfig:
+    steps = m // (SENDER.n * SEND_WINDOW) + 60
+    return SimConfig(n_msgs=m, steps=steps, window=SEND_WINDOW, phi=32,
+                     window_slots=("auto" if windowed else None),
+                     chunk_steps=32)
+
+
+def _run(m: int, windowed: bool):
+    spec = build_spec(SENDER, RECEIVER, _sim(m, windowed))
+    t0 = time.time()
+    res = run_simulation(spec)
+    cold = time.time() - t0
+    t0 = time.time()
+    res = run_simulation(spec)
+    warm = time.time() - t0
+    ok = bool((res.deliver_time >= 0).all() and (res.quack_time >= 0).all())
+    return {
+        "path": "windowed" if windowed else "dense",
+        "n_msgs": m,
+        "window_slots": spec.window_slots or spec.m,
+        "state_bytes": spec.scan_state_nbytes(),
+        "cold_s": cold,
+        "warm_s": warm,
+        "complete": ok,
+    }
+
+
+def rows(dense_max: int = 4096):
+    out = []
+    for m in SIZES:
+        out.append(_run(m, windowed=True))
+        if m <= dense_max:
+            out.append(_run(m, windowed=False))
+        else:
+            spec = build_spec(SENDER, RECEIVER, _sim(m, False))
+            out.append({"path": "dense", "n_msgs": m,
+                        "window_slots": m,
+                        "state_bytes": spec.scan_state_nbytes(),
+                        "cold_s": float("nan"), "warm_s": float("nan"),
+                        "complete": "skipped(dense-max)"})
+    return out
+
+
+def main(dense_max: int = 4096):
+    rs = rows(dense_max)
+    print("# windowed vs dense simulator core (BFT1<->BFT1, window=4)")
+    print("path,n_msgs,window_slots,state_bytes,cold_s,warm_s,complete")
+    for r in rs:
+        print(f"{r['path']},{r['n_msgs']},{r['window_slots']},"
+              f"{r['state_bytes']},{r['cold_s']:.2f},{r['warm_s']:.2f},"
+              f"{r['complete']}")
+    return rs
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dense-max", type=int, default=4096,
+                    help="largest n_msgs to run on the dense path "
+                         "(beyond this only the windowed path runs)")
+    args = ap.parse_args()
+    main(args.dense_max)

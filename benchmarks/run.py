@@ -60,6 +60,18 @@ def kernels():
     return "interpret-mode (see EXPERIMENTS.md roofline for TPU story)"
 
 
+def windowed():
+    from benchmarks import bench_windowed as m
+    rs = m.main()
+    big = [r for r in rs if r["path"] == "windowed"][-1]
+    dense_big = [r for r in rs if r["path"] == "dense"
+                 and r["n_msgs"] == big["n_msgs"]][0]
+    ratio = dense_big["state_bytes"] / max(big["state_bytes"], 1)
+    return (f"state@{big['n_msgs']}={big['state_bytes']}B"
+            f"(const,W={big['window_slots']}),dense/windowed_state="
+            f"{ratio:.1f}x")
+
+
 def crosspod():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
@@ -80,6 +92,7 @@ def main() -> None:
               ("fig9_failures_stakes", fig9),
               ("fig10_heterogeneous", fig10),
               ("thm1_retransmit", thm1),
+              ("windowed_sim", windowed),
               ("kernels", kernels),
               ("crosspod_collectives", crosspod))
     print("== PICSOU / C3B benchmark suite ==")

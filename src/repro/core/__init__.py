@@ -10,9 +10,10 @@ Public API:
     assert run.all_delivered and run.cross_copies_per_msg < 1.01
 """
 
-from .gc import ack_floor_from_reports, collectable
+from .gc import (ack_floor_from_reports, collectable, default_window_slots,
+                 gc_frontier)
 from .protocols import (C3BRun, analytic_throughput, ata_loads, ost_loads,
-                        picsou_loads, run_picsou)
+                        picsou_loads, run_picsou, run_picsou_batch)
 from .quack import (claim_bitmask, cumulative_ack, missing_below_horizon,
                     selective_quack, weighted_quorum_prefix)
 from .retransmit import (declared_lost, elect_retransmitter,
@@ -21,14 +22,16 @@ from .retransmit import (declared_lost, elect_retransmitter,
 from .scheduler import (dss_sequence, hamilton_apportion, lottery_sequence,
                         round_robin_sequence, sender_assignment,
                         skewed_rr_sequence)
-from .simulator import SimResult, SimSpec, build_spec, run_simulation
+from .simulator import (FailArrays, SimResult, SimSpec, build_spec,
+                        run_simulation, run_simulation_batch)
 from .types import (FailureScenario, NetworkModel, RSMConfig, SimConfig,
                     lcm_scale_factors)
 
 __all__ = [
     "RSMConfig", "NetworkModel", "SimConfig", "FailureScenario",
-    "SimSpec", "SimResult", "build_spec", "run_simulation",
-    "C3BRun", "run_picsou", "analytic_throughput",
+    "SimSpec", "SimResult", "FailArrays", "build_spec", "run_simulation",
+    "run_simulation_batch", "default_window_slots", "gc_frontier",
+    "C3BRun", "run_picsou", "run_picsou_batch", "analytic_throughput",
     "picsou_loads", "ata_loads", "ost_loads",
     "cumulative_ack", "claim_bitmask", "missing_below_horizon",
     "weighted_quorum_prefix", "selective_quack",

@@ -18,11 +18,14 @@ intra-RSM broadcast already).
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax.numpy as jnp
 
 from .quack import weighted_quorum_prefix
 
-__all__ = ["collectable", "ack_floor_from_reports"]
+__all__ = ["collectable", "ack_floor_from_reports", "gc_frontier",
+           "default_window_slots"]
 
 
 def collectable(quacked_prefix: jnp.ndarray, m: int) -> jnp.ndarray:
@@ -43,3 +46,67 @@ def ack_floor_from_reports(hq_reports: jnp.ndarray,
     Returns (n_r,) int32.
     """
     return weighted_quorum_prefix(hq_reports, sender_stakes, r_s_threshold)
+
+
+def gc_frontier(*, base: int, t_next: int, m: int,
+                known: np.ndarray, bcast_q: np.ndarray,
+                recv_has: np.ndarray, ack_floor: np.ndarray,
+                stakes_r: np.ndarray, quack_thresh: float,
+                orig_step: np.ndarray, crash_r: np.ndarray,
+                byz_ack_low: np.ndarray) -> int:
+    """How many window slots may be retired without changing the run.
+
+    Host-side (numpy) companion of the sliding-window simulator: given the
+    window state after round ``t_next - 1`` (window columns = absolute
+    indices ``base .. base + W``), return the number of leading slots whose
+    per-message state can never change again, so the window base may
+    advance past them. A slot ``k`` is retirable iff
+
+      * its original send has been dispatched (``orig_step[k] < t_next``),
+      * it is QUACKed at *every* sender — so no sender can ever declare a
+        loss / resend / re-quack it (§4.3: the quacked prefix is what both
+        sides are allowed to forget),
+      * no intra-RSM broadcast of it is still queued, and
+      * every receiver that will still emit acks (not crashed by
+        ``t_next``, not a low-acking liar whose payload ignores its state)
+        effectively holds it (``recv_has`` or below its §4.3 ack floor) —
+        otherwise the slot would keep occupying one of the receiver's phi
+        gap slots and perturb future ack payloads.
+
+    The retired prefix is exactly the metadata both RSMs "forget" in the
+    paper's GC; the conjunction above is what makes forgetting *exact* in
+    the simulator (bit-identical to the dense run).
+    """
+    w = known.shape[-1]
+    abs_idx = base + np.arange(w, dtype=np.int64)
+    # float32 to match the device step's stake einsum exactly — retirement
+    # must agree bit-for-bit with the compiled QUACK decision.
+    w_known = np.einsum("ljm,j->lm", known.astype(np.float32),
+                        np.asarray(stakes_r, dtype=np.float32))
+    quacked_everywhere = (w_known >= np.float32(quack_thresh)).all(axis=0)
+    dispatched = np.asarray(orig_step)[:w] < t_next
+    no_pending_bcast = ~bcast_q.any(axis=0)
+    relevant = ((np.asarray(crash_r) < 0) | (np.asarray(crash_r) > t_next))
+    relevant = relevant & ~np.asarray(byz_ack_low)
+    eff = recv_has | (abs_idx[None, :] < np.asarray(ack_floor)[:, None])
+    eff_full = (eff | ~relevant[:, None]).all(axis=0)
+    ok = (quacked_everywhere & dispatched & no_pending_bcast & eff_full
+          & (abs_idx < m))
+    return int(np.cumprod(ok.astype(np.int64)).sum())
+
+
+def default_window_slots(n_s: int, n_r: int, send_window: int, phi: int,
+                         chunk_steps: int, slack_rounds: int = 8) -> int:
+    """Window width W for the sliding-window simulator (§4.3 sizing).
+
+    The frontier only advances at chunk boundaries, so the window must hold
+    one chunk's worth of fresh originations (``n_s * send_window`` per
+    round) plus the un-retired backlog: a message QUACKs at every sender
+    only after the ack rotation has visited all of them (~``n_s`` rounds)
+    and the intra-RSM broadcast landed (+receiver rotation slack, ~``n_r``),
+    and the phi-list bounds how far ahead complaints reach. Failure-free
+    this is a constant independent of stream length — the paper's P1.
+    """
+    lag = chunk_steps + n_s + n_r + slack_rounds
+    w = n_s * max(send_window, 1) * lag + phi
+    return int(-(-w // 64) * 64)

@@ -17,15 +17,16 @@ RSM (n_r - 1 copies); ATA needs no intra-RSM broadcast.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 from .network import NodeLoad, Resources, throughput_from_loads
-from .simulator import SimResult, SimSpec, build_spec, run_simulation
+from .simulator import (SimResult, SimSpec, build_spec, run_simulation,
+                        run_simulation_batch)
 from .types import (COUNTER_BYTES, MAC_BYTES, SEQNO_BYTES, FailureScenario,
                     NetworkModel, RSMConfig, SimConfig)
 
 __all__ = ["picsou_loads", "ata_loads", "ost_loads", "analytic_throughput",
-           "C3BRun", "run_picsou"]
+           "C3BRun", "run_picsou", "run_picsou_batch"]
 
 
 def _ack_bytes(cfg: RSMConfig, backlog: int = 0) -> float:
@@ -195,3 +196,18 @@ def run_picsou(sender_cfg: RSMConfig, recv_cfg: RSMConfig,
                failures: FailureScenario = FailureScenario.none()) -> C3BRun:
     spec = build_spec(sender_cfg, recv_cfg, sim, failures)
     return C3BRun(result=run_simulation(spec), spec=spec)
+
+
+def run_picsou_batch(sender_cfg: RSMConfig, recv_cfg: RSMConfig,
+                     sim: SimConfig,
+                     scenarios: Sequence[FailureScenario]) -> List[C3BRun]:
+    """Run a whole failure-scenario sweep in one compilation (jax.vmap).
+
+    All scenarios share the schedules/thresholds of (sender_cfg, recv_cfg,
+    sim); their failure masks are stacked and dispatched as a single
+    batched simulation (``run_simulation_batch``), so a sweep costs one
+    compile + one device call instead of one cached program per scenario.
+    """
+    specs = [build_spec(sender_cfg, recv_cfg, sim, f) for f in scenarios]
+    return [C3BRun(result=r, spec=s)
+            for s, r in zip(specs, run_simulation_batch(specs))]

@@ -7,6 +7,15 @@ messages m_0 .. m_{p-1}". A QUACK for prefix p forms at a sender once
 replicas totalling ``u_r + 1`` stake have acked >= p — at least one of those
 is honest, and an honest receiver broadcasts intra-RSM, so delivery of
 m_0..m_{p-1} is guaranteed (§4.1 "Detecting successful sends").
+
+Sliding-window (offset-aware) form: every function takes an optional
+``base`` — the absolute sequence number of column 0 of the ``received``
+array. The window invariant maintained by the simulator's GC rotation
+(§4.3) is that everything below ``base`` is already held (or floor-acked)
+by every replica whose acks still matter, so the absolute cumulative ack
+is ``base +`` the in-window prefix and gap ranks start at zero at the
+window base. ``base == 0`` with a full-width array recovers the dense
+semantics exactly.
 """
 
 from __future__ import annotations
@@ -23,36 +32,40 @@ __all__ = [
 ]
 
 
-def cumulative_ack(received: jnp.ndarray) -> jnp.ndarray:
+def cumulative_ack(received: jnp.ndarray, base=0) -> jnp.ndarray:
     """Highest contiguous prefix count per receiver.
 
-    received: (n_r, M) bool -> (n_r,) int32.
+    received: (n_r, W) bool -> (n_r,) int32 *absolute* counts. ``base`` is
+    the absolute index of column 0 (window invariant: everything below it
+    counts as received).
     """
     prefix = jnp.cumprod(received.astype(jnp.int32), axis=-1)
-    return prefix.sum(axis=-1).astype(jnp.int32)
+    return (base + prefix.sum(axis=-1)).astype(jnp.int32)
 
 
-def missing_below_horizon(received: jnp.ndarray, phi: int) -> jnp.ndarray:
+def missing_below_horizon(received: jnp.ndarray, phi: int,
+                          base=0) -> jnp.ndarray:
     """Which messages a receiver reports missing, bounded by the phi-list.
 
     A receiver only reports gaps below its highest received index (anything
     above could simply not have been sent yet), and at most ``phi`` of them
-    (§4.2 Parallel Cumulative Acknowledgments). Returns (n_r, M) bool.
+    (§4.2 Parallel Cumulative Acknowledgments). Returns (n_r, W) bool for
+    the window columns; gaps can only exist at or above ``base``.
     """
-    m = received.shape[-1]
-    idx = jnp.arange(m, dtype=jnp.int32)
-    # top[j] = 1 + highest received index (0 if nothing received)
+    w = received.shape[-1]
+    idx = base + jnp.arange(w, dtype=jnp.int32)
+    # top[j] = 1 + highest received index (base if nothing in-window)
     any_recv = received.any(axis=-1)
     top = jnp.where(any_recv,
-                    m - jnp.argmax(received[..., ::-1], axis=-1),
-                    0).astype(jnp.int32)
+                    base + w - jnp.argmax(received[..., ::-1], axis=-1),
+                    base).astype(jnp.int32)
     missing = (~received) & (idx[None, :] < top[:, None])
     # keep only the first `phi` missing entries per row
     rank = jnp.cumsum(missing.astype(jnp.int32), axis=-1)
     return missing & (rank <= phi)
 
 
-def claim_bitmask(received: jnp.ndarray, phi: int):
+def claim_bitmask(received: jnp.ndarray, phi: int, base=0, total=None):
     """Receiver's honest ack payload: (cum_ack, claim, claim_known).
 
     claim_known[j, k] — the ack message from j describes the status of k
@@ -60,19 +73,25 @@ def claim_bitmask(received: jnp.ndarray, phi: int):
     claim[j, k]      — j claims to have received k (only meaningful where
     claim_known).  This is exactly "cumulative counter + phi-list" in array
     form: below the horizon, claim == received; missing list = the gaps.
+
+    ``base``/``total`` select the sliding-window form: columns cover
+    absolute indices [base, base + W) of a stream of ``total`` messages
+    (``total`` must be given explicitly when ``base`` is traced).
     """
-    m = received.shape[-1]
-    idx = jnp.arange(m, dtype=jnp.int32)
-    cum = cumulative_ack(received)
-    miss = missing_below_horizon(received, phi)
+    w = received.shape[-1]
+    if total is None:
+        total = base + w
+    idx = base + jnp.arange(w, dtype=jnp.int32)
+    cum = cumulative_ack(received, base)
     # horizon: everything strictly below the (phi+1)-th missing index is
     # described. rank counts missing entries; positions with rank <= phi and
     # (missing => in the reported list) are known.
     missing_all = (~received)
     rank_all = jnp.cumsum(missing_all.astype(jnp.int32), axis=-1)
-    # (phi+1)-th missing position per row (or M if fewer than phi+1 gaps)
+    # (phi+1)-th missing position per row (or `total` if <= phi gaps)
     over = rank_all > phi
-    horizon = jnp.where(over.any(axis=-1), jnp.argmax(over, axis=-1), m)
+    horizon = jnp.where(over.any(axis=-1),
+                        base + jnp.argmax(over, axis=-1), total)
     # also bounded by top (we cannot claim receipt of unseen suffix): known
     # region = [0, max(horizon, cum)) union received-with-rank<=phi.
     known = idx[None, :] < horizon[:, None]
@@ -80,7 +99,6 @@ def claim_bitmask(received: jnp.ndarray, phi: int):
     # everything below cum is received by definition of cum:
     claim = claim | (idx[None, :] < cum[:, None])
     known = known | (idx[None, :] < cum[:, None])
-    del miss
     return cum, claim, known
 
 

@@ -4,16 +4,32 @@ This mirrors ``simulator.py`` step-for-step but in explicit loops, so the
 protocol logic can be read top-to-bottom against §4–§5 of the paper and the
 vectorized implementation can be cross-checked exactly
 (``tests/test_simulator.py::test_jax_matches_reference``).
+
+For a windowed spec (``spec.window_slots > 0``) the oracle also mirrors
+the sliding-window machinery: it keeps full dense state (it is the
+*oracle*, it never forgets) but advances the same GC frontier with the
+same shared ``gc.gc_frontier`` rule at the same chunk boundaries as the
+jax windowed path, snapshots every retired slot's outputs at retirement
+time, and asserts at the end of the run that none of them ever changed
+afterwards. That is the ground truth for the windowed core: if the
+retirement rule ever forgot a slot whose state could still move, the
+snapshot check fails here first. The frontier trajectory is returned in
+``RefResult.gc_frontiers`` so tests can compare it bit-for-bit against
+``SimResult.gc_frontiers``, and ``RefResult.retired_quack_margin`` records
+the smallest stake-weighted QUACK margin over all retired slots (a retired
+slot must be QUACKed at *every* sender — §4.3's "both sides may forget the
+quacked prefix").
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
-from .simulator import SimSpec
+from .gc import gc_frontier
+from .simulator import SimSpec, _NEVER_STEP
 
 __all__ = ["run_reference"]
 
@@ -27,6 +43,8 @@ class RefResult:
     cross_msgs: np.ndarray    # (T,)
     intra_msgs: np.ndarray    # (T,)
     resends: np.ndarray       # (T,)
+    gc_frontiers: Optional[np.ndarray] = None   # (n_chunks,) window base
+    retired_quack_margin: Optional[float] = None
 
 
 def _cum(received_row: np.ndarray) -> int:
@@ -105,6 +123,16 @@ def run_reference(spec: SimSpec) -> RefResult:
     cross_hist: List[int] = []
     intra_hist: List[int] = []
     resend_hist: List[int] = []
+
+    # --- sliding-window mirror (windowed specs only) ----------------------
+    win = spec.window_slots
+    chunk = max(spec.chunk_steps, 1)
+    base = 0
+    bases = [0] if win else None
+    retired_snaps = []        # (k, quack_time col, deliver, retry col, recv col)
+    retired_margin = np.inf
+    orig_step_pad = np.concatenate(
+        [orig_step, np.full(max(win, 1), _NEVER_STEP, dtype=orig_step.dtype)])
 
     def quacked_at(l: int) -> np.ndarray:
         w = (known[l].astype(np.float64) * st_r[:, None]).sum(axis=0)
@@ -209,7 +237,43 @@ def run_reference(spec: SimSpec) -> RefResult:
         intra_hist.append(intra)
         resend_hist.append(len(resends))
 
+        # (6) window mirror: advance the GC frontier at chunk boundaries,
+        # exactly where the jax windowed path rotates its ring buffers.
+        t_next = t + 1
+        if win and t_next % chunk == 0 and t_next < spec.steps:
+            lo, hi = base, base + win
+            f = gc_frontier(
+                base=base, t_next=t_next, m=m,
+                known=known[:, :, lo:hi], bcast_q=bcast_q[:, lo:hi],
+                recv_has=recv_has[:, lo:hi], ack_floor=ack_floor,
+                stakes_r=st_r, quack_thresh=spec.quack_thresh,
+                orig_step=orig_step_pad[lo:hi], crash_r=crash_r,
+                byz_ack_low=byz_ack_low)
+            for k in range(base, base + f):
+                # float32 like the device QUACK einsum (see gc_frontier)
+                w_k = (known[:, :, k].astype(np.float32)
+                       * st_r[None, :].astype(np.float32)).sum(axis=1)
+                retired_margin = min(retired_margin, float(w_k.min()))
+                retired_snaps.append((k, quack_time[:, k].copy(),
+                                      deliver_time[k], retry[:, k].copy(),
+                                      recv_has[:, k].copy()))
+            base += f
+            bases.append(base)
+
+    # retirement safety: a retired slot's outputs must never change again.
+    for (k, qt, dt, rt, rh) in retired_snaps:
+        assert np.array_equal(qt, quack_time[:, k]), (
+            f"retired slot {k}: quack_time changed after retirement")
+        assert dt == deliver_time[k], (
+            f"retired slot {k}: deliver_time changed after retirement")
+        assert np.array_equal(rt, retry[:, k]), (
+            f"retired slot {k}: retry changed after retirement")
+        assert np.array_equal(rh, recv_has[:, k]), (
+            f"retired slot {k}: recv_has changed after retirement")
+
     return RefResult(
         quack_time=quack_time, deliver_time=deliver_time, retry=retry,
         recv_has=recv_has, cross_msgs=np.array(cross_hist),
-        intra_msgs=np.array(intra_hist), resends=np.array(resend_hist))
+        intra_msgs=np.array(intra_hist), resends=np.array(resend_hist),
+        gc_frontiers=(np.asarray(bases, dtype=np.int64) if win else None),
+        retired_quack_margin=(retired_margin if win else None))

@@ -1,12 +1,27 @@
-"""Vectorized PICSOU simulator (synchronous rounds, ``jax.lax.scan``).
+"""Vectorized PICSOU simulator — windowed streaming core (``jax.lax.scan``).
 
 The simulator executes the *full* protocol of §4–§5 — round-robin / DSS
 send scheduling, receiver rotation, intra-RSM broadcast, cumulative +
 phi-list acknowledgements, QUACK formation, duplicate-complaint loss
 detection, communication-free retransmitter election, GC with the
 highest-quacked metadata defence, stake weighting and LCM-scaled
-retransmission rotation — as dense array state transitions, one scan step
-per synchronous round (one cross-RSM RTT).
+retransmission rotation — as array state transitions, one scan step per
+synchronous round (one cross-RSM RTT).
+
+Per-message state lives in a **sliding window**: each message-indexed array
+holds ``W = spec.window_slots`` columns covering absolute sequence numbers
+``[base, base + W)``. The run is split into compiled chunks of
+``spec.chunk_steps`` rounds; between chunks the host advances ``base`` past
+the GC frontier (``gc.gc_frontier`` — the prefix both sides may forget,
+§4.3), streaming the retired columns' quack/deliver/retry/recv outputs into
+host buffers and refilling the tail with fresh slots. Failure-free, the
+frontier tracks the stream, so device state and compile time are O(W) —
+*independent of the stream length M* — which is exactly the paper's P1
+constant-metadata invariant applied to the simulator itself. The dense path
+(``window_slots == 0``) is the same step function instantiated at
+``base=0, W=M`` with no rotation, and the two are bit-identical wherever
+the window is wide enough to hold every in-flight message
+(``tests/test_windowed.py``).
 
 Semantics of a round ``t`` (matching Figure 3/4/5/6 of the paper):
   1. intra-RSM broadcasts queued at t-1 land;
@@ -18,28 +33,38 @@ Semantics of a round ``t`` (matching Figure 3/4/5/6 of the paper):
      duplicate-cum complaint) to its rotating target sender; senders fold
      the ack into their knowledge; QUACK / GC state advances.
 
-The pure-python oracle in ``refsim.py`` mirrors this loop unvectorized;
-``tests/test_simulator.py`` cross-checks them step by step.
+Failure masks are traced inputs (``FailArrays``), not compile-time
+constants, so one compilation serves every failure scenario of a given
+shape — and ``run_simulation_batch`` ``jax.vmap``s the same step over a
+stack of scenarios for one-compilation sweeps.
+
+The pure-python oracle in ``refsim.py`` mirrors this loop (including the
+GC-frontier trajectory) unvectorized; ``tests/test_simulator.py`` and
+``tests/test_windowed.py`` cross-check them step by step.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import scheduler as sched
+from .gc import default_window_slots, gc_frontier
 from .quack import claim_bitmask, missing_below_horizon, weighted_quorum_prefix
 from .types import (COUNTER_BYTES, MAC_BYTES, SEQNO_BYTES, FailureScenario,
                     NetworkModel, RSMConfig, SimConfig, lcm_scale_factors)
 
-__all__ = ["SimSpec", "SimResult", "build_spec", "run_simulation"]
+__all__ = ["SimSpec", "SimResult", "FailArrays", "build_spec",
+           "run_simulation", "run_simulation_batch"]
 
 NEVER = jnp.int32(-1)
+_NEVER_STEP = 2 ** 30     # orig_step pad for window slots beyond the stream
+_BIG = jnp.int32(2 ** 30)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,21 +94,50 @@ class SimSpec:
     byz_ack_low: Tuple[bool, ...]
     byz_bcast_partial: Tuple[bool, ...]
     bcast_limit: int
+    window_slots: int = 0             # 0 => dense (full-M) state
+    chunk_steps: int = 0              # rounds per compiled chunk (windowed)
+
+    def scan_state_nbytes(self) -> int:
+        """Device bytes of the per-round scan state (the P1 footprint)."""
+        w = self.window_slots or self.m
+        n_s, n_r = self.n_s, self.n_r
+        return (3 * n_r * w                # recv_has / bcast_q / bcast_done
+                + 3 * n_s * n_r * w        # known / complaint / repeat_c
+                + 4 * (n_s * n_r           # last_cum
+                       + 2 * n_s * w       # retry / quack_time
+                       + w                 # deliver_time
+                       + n_r * n_s + n_r   # hq_reports / ack_floor
+                       + 2))               # base / retired_delivered
+
+
+class FailArrays(NamedTuple):
+    """Failure masks as traced device arrays (one compile per *shape*)."""
+
+    crash_s: jnp.ndarray           # (n_s,) int32, -1 = never
+    crash_r: jnp.ndarray           # (n_r,) int32
+    byz_send_drop: jnp.ndarray     # (n_s,) bool
+    byz_recv_drop: jnp.ndarray     # (n_r,) bool
+    byz_ack_advance: jnp.ndarray   # (n_r,) int32
+    byz_ack_low: jnp.ndarray       # (n_r,) bool
+    byz_bcast_partial: jnp.ndarray  # (n_r,) bool
+    bcast_limit: jnp.ndarray       # () int32
 
 
 class SimState(NamedTuple):
-    recv_has: jnp.ndarray      # (n_r, M) bool — receiver truly holds k
-    bcast_q: jnp.ndarray       # (n_r, M) bool — queued broadcast for t+1
-    bcast_done: jnp.ndarray    # (n_r, M) bool
-    known: jnp.ndarray         # (n_s, n_r, M) bool — j's claims known to l
-    complaint: jnp.ndarray     # (n_s, n_r, M) bool — j's last complaint to l
-    repeat_c: jnp.ndarray      # (n_s, n_r, M) bool — complained twice to l
-    last_cum: jnp.ndarray      # (n_s, n_r) int32
-    retry: jnp.ndarray         # (n_s, M) int32
-    quack_time: jnp.ndarray    # (n_s, M) int32, -1 = not yet
-    deliver_time: jnp.ndarray  # (M,) int32, -1 = not yet
-    hq_reports: jnp.ndarray    # (n_r, n_s) int32
-    ack_floor: jnp.ndarray     # (n_r,) int32
+    recv_has: jnp.ndarray      # (n_r, W) bool — receiver truly holds slot
+    bcast_q: jnp.ndarray       # (n_r, W) bool — queued broadcast for t+1
+    bcast_done: jnp.ndarray    # (n_r, W) bool
+    known: jnp.ndarray         # (n_s, n_r, W) bool — j's claims known to l
+    complaint: jnp.ndarray     # (n_s, n_r, W) bool — j's last complaint to l
+    repeat_c: jnp.ndarray      # (n_s, n_r, W) bool — complained twice to l
+    last_cum: jnp.ndarray      # (n_s, n_r) int32 (absolute counts)
+    retry: jnp.ndarray         # (n_s, W) int32
+    quack_time: jnp.ndarray    # (n_s, W) int32, -1 = not yet
+    deliver_time: jnp.ndarray  # (W,) int32, -1 = not yet
+    hq_reports: jnp.ndarray    # (n_r, n_s) int32 (absolute seqnos)
+    ack_floor: jnp.ndarray     # (n_r,) int32 (absolute counts)
+    base: jnp.ndarray          # () int32 — absolute seqno of window col 0
+    retired_delivered: jnp.ndarray  # () int32 — delivered among retired
 
 
 class StepMetrics(NamedTuple):
@@ -103,6 +157,7 @@ class SimResult:
     deliver_time: np.ndarray              # (M,)
     retry: np.ndarray                     # (n_s, M)
     recv_has: np.ndarray                  # (n_r, M)
+    gc_frontiers: Optional[np.ndarray] = None  # window base per chunk
 
     # --- derived -------------------------------------------------------
     def completion_step(self) -> int:
@@ -186,6 +241,15 @@ def build_spec(sender: RSMConfig, receiver: RSMConfig,
             return tuple([default] * n)
         return tuple(x)
 
+    ws = sim.window_slots
+    if ws is None:
+        w_slots = 0
+    elif ws == "auto":
+        w_slots = default_window_slots(n_s, n_r, sim.window, sim.phi,
+                                       sim.chunk_steps)
+    else:
+        w_slots = int(ws)
+
     return SimSpec(
         n_s=n_s, n_r=n_r, m=m, steps=sim.steps, phi=sim.phi,
         quack_thresh=receiver.quack_threshold,
@@ -206,50 +270,70 @@ def build_spec(sender: RSMConfig, receiver: RSMConfig,
         byz_ack_low=tup(failures.byz_ack_low, n_r, False),
         byz_bcast_partial=tup(failures.byz_bcast_partial, n_r, False),
         bcast_limit=failures.bcast_limit,
+        window_slots=w_slots,
+        chunk_steps=sim.chunk_steps if w_slots else 0,
     )
 
 
-@functools.lru_cache(maxsize=64)
-def _compiled_sim(spec: SimSpec):
-    """Build + jit the scan for a spec (cached: specs are hashable)."""
+def _fail_arrays(spec: SimSpec) -> FailArrays:
+    return FailArrays(
+        crash_s=jnp.asarray(spec.crash_s, dtype=jnp.int32),
+        crash_r=jnp.asarray(spec.crash_r, dtype=jnp.int32),
+        byz_send_drop=jnp.asarray(spec.byz_send_drop, dtype=bool),
+        byz_recv_drop=jnp.asarray(spec.byz_recv_drop, dtype=bool),
+        byz_ack_advance=jnp.asarray(spec.byz_ack_advance, dtype=jnp.int32),
+        byz_ack_low=jnp.asarray(spec.byz_ack_low, dtype=bool),
+        byz_bcast_partial=jnp.asarray(spec.byz_bcast_partial, dtype=bool),
+        bcast_limit=jnp.int32(max(spec.bcast_limit, 0)),
+    )
+
+
+def _neutral(spec: SimSpec) -> SimSpec:
+    """Compile-cache key: failure masks are traced, window handled apart."""
+    n_s, n_r = spec.n_s, spec.n_r
+    return dataclasses.replace(
+        spec,
+        crash_s=(-1,) * n_s, crash_r=(-1,) * n_r,
+        byz_send_drop=(False,) * n_s, byz_recv_drop=(False,) * n_r,
+        byz_ack_advance=(0,) * n_r, byz_ack_low=(False,) * n_r,
+        byz_bcast_partial=(False,) * n_r, bcast_limit=0,
+        window_slots=0, chunk_steps=0)
+
+
+def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
+    """Per-round transition over ``w`` window columns starting at ``base``.
+
+    ``base`` may be a python int (dense: 0) or a traced scalar (windowed);
+    all sequence-number arithmetic is absolute so both instantiations run
+    the identical protocol.
+    """
     n_s, n_r, m = spec.n_s, spec.n_r, spec.m
     phi = spec.phi
+    orig_sender, orig_recv, orig_step = sched_w
 
     stakes_s = jnp.asarray(spec.stakes_s, dtype=jnp.float32)
     stakes_r = jnp.asarray(spec.stakes_r, dtype=jnp.float32)
-    orig_sender = jnp.asarray(spec.orig_sender, dtype=jnp.int32)
-    orig_recv = jnp.asarray(spec.orig_recv, dtype=jnp.int32)
-    orig_step = jnp.asarray(spec.orig_step, dtype=jnp.int32)
     rs_seq = jnp.asarray(spec.rs_seq, dtype=jnp.int32)
     rr_seq = jnp.asarray(spec.rr_seq, dtype=jnp.int32)
-    crash_s = jnp.asarray(spec.crash_s, dtype=jnp.int32)
-    crash_r = jnp.asarray(spec.crash_r, dtype=jnp.int32)
-    byz_send_drop = jnp.asarray(spec.byz_send_drop, dtype=bool)
-    byz_recv_drop = jnp.asarray(spec.byz_recv_drop, dtype=bool)
-    byz_ack_advance = jnp.asarray(spec.byz_ack_advance, dtype=jnp.int32)
-    byz_ack_low = jnp.asarray(spec.byz_ack_low, dtype=bool)
-    byz_bcast_partial = jnp.asarray(spec.byz_bcast_partial, dtype=bool)
-
-    idx_m = jnp.arange(m, dtype=jnp.int32)
-    idx_r = jnp.arange(n_r, dtype=jnp.int32)
-    idx_s = jnp.arange(n_s, dtype=jnp.int32)
-    honest_r = (crash_r < 0) & ~(byz_recv_drop | byz_ack_low
-                                 | (byz_ack_advance > 0) | byz_bcast_partial)
-    honest_s = (crash_s < 0) & ~byz_send_drop
     ls, lr = len(spec.rs_seq), len(spec.rr_seq)
 
+    abs_idx = (base + jnp.arange(w, dtype=jnp.int32)).astype(jnp.int32)
+    idx_r = jnp.arange(n_r, dtype=jnp.int32)
+    idx_s = jnp.arange(n_s, dtype=jnp.int32)
+    honest_r = (fail.crash_r < 0) & ~(fail.byz_recv_drop | fail.byz_ack_low
+                                      | (fail.byz_ack_advance > 0)
+                                      | fail.byz_bcast_partial)
+    honest_s = (fail.crash_s < 0) & ~fail.byz_send_drop
+
     # broadcast reach matrix (n_r, n_r): who hears j's intra-RSM broadcast.
-    reach = np.ones((n_r, n_r), dtype=bool)
-    for j in range(n_r):
-        if spec.byz_bcast_partial[j]:
-            reach[j, :] = False
-            reach[j, :max(spec.bcast_limit, 0)] = True
-        reach[j, j] = False
-    reach = jnp.asarray(reach)
+    partial_reach = idx_r[None, :] < fail.bcast_limit
+    reach = jnp.where(fail.byz_bcast_partial[:, None], partial_reach,
+                      jnp.ones((n_r, n_r), dtype=bool))
+    reach = reach & (idx_r[None, :] != idx_r[:, None])
 
     def step(state: SimState, t: jnp.ndarray):
-        alive_s = (crash_s < 0) | (t < crash_s)
-        alive_r = (crash_r < 0) | (t < crash_r)
+        alive_s = (fail.crash_s < 0) | (t < fail.crash_s)
+        alive_r = (fail.crash_r < 0) | (t < fail.crash_r)
 
         # (1) broadcasts queued last round land now ------------------------
         bcast_sent = state.bcast_q & alive_r[:, None]
@@ -259,7 +343,8 @@ def _compiled_sim(spec: SimSpec):
 
         # (2) retransmission declaration + election (knowledge of t-1) -----
         w_complaints = jnp.einsum("ljm,j->lm",
-                                  state.repeat_c.astype(jnp.float32), stakes_r)
+                                  state.repeat_c.astype(jnp.float32),
+                                  stakes_r)
         quacked_msg_prev = (jnp.einsum("ljm,j->lm",
                                        state.known.astype(jnp.float32),
                                        stakes_r) >= spec.quack_thresh)
@@ -269,22 +354,24 @@ def _compiled_sim(spec: SimSpec):
         retry_new = state.retry + declared.astype(jnp.int32)
         # Fig. 6: the a-th retransmission of k is sent by the a-th successor
         # of the original sender: sender_new = (orig + #retransmit) mod n_s.
-        elected = rs_seq[(idx_m[None, :] + retry_new) % ls] == idx_s[:, None]
-        resend = declared & elected & alive_s[:, None] & ~byz_send_drop[:, None]
+        elected = (rs_seq[(abs_idx[None, :] + retry_new) % ls]
+                   == idx_s[:, None])
+        resend = (declared & elected & alive_s[:, None]
+                  & ~fail.byz_send_drop[:, None])
         # clear complaint trackers where a loss was declared (fresh cycle)
         complaint = jnp.where(declared[:, None, :], False, state.complaint)
         repeat_c = jnp.where(declared[:, None, :], False, state.repeat_c)
-        re_target = rr_seq[(orig_recv[None, :] + retry_new) % lr]  # (n_s, M)
+        re_target = rr_seq[(orig_recv[None, :] + retry_new) % lr]  # (n_s, W)
 
         # (3) original sends + landing --------------------------------------
         orig_ok = ((orig_step == t) & alive_s[orig_sender]
-                   & ~byz_send_drop[orig_sender])
+                   & ~fail.byz_send_drop[orig_sender])
         s_orig = orig_ok[None, :] & (orig_recv[None, :] == idx_r[:, None])
         s_re = (jnp.einsum("lm,lim->im", resend.astype(jnp.int32),
                            (re_target[:, None, :] == idx_r[None, :, None])
                            .astype(jnp.int32)) > 0)
-        wire = s_orig | s_re                                   # (n_r, M)
-        land = wire & alive_r[:, None] & ~byz_recv_drop[:, None]
+        wire = s_orig | s_re                                   # (n_r, W)
+        land = wire & alive_r[:, None] & ~fail.byz_recv_drop[:, None]
         recv_has = recv_has | land
         bcast_q = land & ~bcast_done
         deliver_now = (recv_has & honest_r[:, None]).any(axis=0)
@@ -293,11 +380,13 @@ def _compiled_sim(spec: SimSpec):
 
         # (3b) highest-quacked metadata rides on every landed data message:
         # a sender's current quacked prefix reaches every receiver it sent
-        # anything to this round (constant-size piggyback, §4.3).
-        qp_prev = jnp.sum(jnp.cumprod(quacked_msg_prev.astype(jnp.int32),
-                                      axis=1), axis=1)        # (n_s,)
+        # anything to this round (constant-size piggyback, §4.3). Window
+        # slots below `base` are all-quacked by the retirement rule, so the
+        # absolute prefix is base + the in-window prefix.
+        qp_prev = base + jnp.sum(
+            jnp.cumprod(quacked_msg_prev.astype(jnp.int32), axis=1), axis=1)
         e_lk = ((orig_sender[None, :] == idx_s[:, None])
-                & orig_ok[None, :])                            # (n_s, M)
+                & orig_ok[None, :])                            # (n_s, W)
         sent_orig_to = jnp.einsum("lk,ik->li", e_lk.astype(jnp.int32),
                                   s_orig.astype(jnp.int32)) > 0
         sent_re_to = jnp.einsum(
@@ -306,33 +395,34 @@ def _compiled_sim(spec: SimSpec):
         ) > 0
         heard = (sent_orig_to | sent_re_to).T                  # (n_r, n_s)
         hq_new = jnp.where(heard & alive_r[:, None], qp_prev[None, :], 0)
-        hq_reports = jnp.maximum(state.hq_reports, hq_new)
+        hq_reports = jnp.maximum(state.hq_reports, hq_new.astype(jnp.int32))
 
         # (4) acknowledgements ---------------------------------------------
         ack_floor = weighted_quorum_prefix(hq_reports, stakes_s,
                                            spec.hq_thresh)
         ack_floor = jnp.maximum(state.ack_floor, ack_floor)
-        eff = recv_has | (idx_m[None, :] < ack_floor[:, None])
-        cum, claim, _known_mask = claim_bitmask(eff, phi)
-        miss = missing_below_horizon(eff, phi)
+        eff = recv_has | (abs_idx[None, :] < ack_floor[:, None])
+        cum, claim, _known_mask = claim_bitmask(eff, phi, base, m)
+        miss = missing_below_horizon(eff, phi, base)
         # Byzantine lies --------------------------------------------------
-        cum = jnp.where(byz_ack_low, 0, cum)
-        cum = jnp.where(byz_ack_advance > 0,
-                        jnp.minimum(cum + byz_ack_advance, m), cum)
-        claim = jnp.where(byz_ack_low[:, None], False, claim)
-        claim = jnp.where((byz_ack_advance > 0)[:, None],
-                          idx_m[None, :] < cum[:, None], claim)
-        miss = jnp.where(byz_ack_low[:, None], idx_m[None, :] < phi, miss)
-        miss = jnp.where((byz_ack_advance > 0)[:, None], False, miss)
+        cum = jnp.where(fail.byz_ack_low, 0, cum)
+        cum = jnp.where(fail.byz_ack_advance > 0,
+                        jnp.minimum(cum + fail.byz_ack_advance, m), cum)
+        claim = jnp.where(fail.byz_ack_low[:, None], False, claim)
+        claim = jnp.where((fail.byz_ack_advance > 0)[:, None],
+                          abs_idx[None, :] < cum[:, None], claim)
+        miss = jnp.where(fail.byz_ack_low[:, None],
+                         abs_idx[None, :] < phi, miss)
+        miss = jnp.where((fail.byz_ack_advance > 0)[:, None], False, miss)
         # implicit duplicate-cum complaint: cum unchanged since last ack to
         # the same sender => complain about index cum (if it exists).
         tgt = (idx_r + t) % n_s                                  # (n_r,)
         upd = (tgt[None, :] == idx_s[:, None]) & alive_r[None, :]  # (n_s,n_r)
         dup_cum = (state.last_cum == cum[None, :])               # (n_s, n_r)
         dup_complaint = (dup_cum[:, :, None]
-                         & (idx_m[None, None, :] == cum[None, :, None])
+                         & (abs_idx[None, None, :] == cum[None, :, None])
                          & (cum[None, :, None] < m))
-        new_complaint = miss[None, :, :] | dup_complaint         # (n_s,n_r,M)
+        new_complaint = miss[None, :, :] | dup_complaint         # (n_s,n_r,W)
         known = state.known | (upd[:, :, None] & claim[None, :, :])
         repeat_c = jnp.where(upd[:, :, None],
                              repeat_c | (complaint & new_complaint), repeat_c)
@@ -350,11 +440,12 @@ def _compiled_sim(spec: SimSpec):
             known=known, complaint=complaint, repeat_c=repeat_c,
             last_cum=last_cum, retry=retry_new, quack_time=quack_time,
             deliver_time=deliver_time, hq_reports=hq_reports,
-            ack_floor=ack_floor)
+            ack_floor=ack_floor, base=state.base,
+            retired_delivered=state.retired_delivered)
 
-        qp = jnp.sum(jnp.cumprod(quacked_msg.astype(jnp.int32), axis=1),
-                     axis=1)
-        min_qp = jnp.min(jnp.where(honest_s, qp, jnp.int32(2 ** 30)))
+        qp = base + jnp.sum(jnp.cumprod(quacked_msg.astype(jnp.int32),
+                                        axis=1), axis=1)
+        min_qp = jnp.min(jnp.where(honest_s, qp, _BIG))
         metrics = StepMetrics(
             cross_msgs=(orig_ok.sum() + resend.sum()).astype(jnp.int32),
             intra_msgs=jnp.einsum("jk,j->", bcast_sent.astype(jnp.int32),
@@ -362,41 +453,208 @@ def _compiled_sim(spec: SimSpec):
                                   ).astype(jnp.int32),
             resends=resend.sum().astype(jnp.int32),
             acks=alive_r.sum().astype(jnp.int32),
-            delivered=(deliver_time >= 0).sum().astype(jnp.int32),
+            delivered=((deliver_time >= 0).sum().astype(jnp.int32)
+                       + state.retired_delivered),
             min_quack_prefix=min_qp.astype(jnp.int32),
         )
         return new_state, metrics
 
-    def init_state() -> SimState:
-        f, b = jnp.zeros, jnp.full
-        return SimState(
-            recv_has=f((n_r, m), dtype=bool),
-            bcast_q=f((n_r, m), dtype=bool),
-            bcast_done=f((n_r, m), dtype=bool),
-            known=f((n_s, n_r, m), dtype=bool),
-            complaint=f((n_s, n_r, m), dtype=bool),
-            repeat_c=f((n_s, n_r, m), dtype=bool),
-            last_cum=b((n_s, n_r), -1, dtype=jnp.int32),
-            retry=f((n_s, m), dtype=jnp.int32),
-            quack_time=b((n_s, m), -1, dtype=jnp.int32),
-            deliver_time=b((m,), -1, dtype=jnp.int32),
-            hq_reports=f((n_r, n_s), dtype=jnp.int32),
-            ack_floor=f((n_r,), dtype=jnp.int32),
-        )
+    return step
 
-    @jax.jit
-    def run():
-        state0 = init_state()
-        ts = jnp.arange(spec.steps, dtype=jnp.int32)
-        final, ms = jax.lax.scan(step, state0, ts)
-        return final, ms
+
+def _init_state(spec: SimSpec, w: int) -> SimState:
+    n_s, n_r = spec.n_s, spec.n_r
+    f, b = jnp.zeros, jnp.full
+    return SimState(
+        recv_has=f((n_r, w), dtype=bool),
+        bcast_q=f((n_r, w), dtype=bool),
+        bcast_done=f((n_r, w), dtype=bool),
+        known=f((n_s, n_r, w), dtype=bool),
+        complaint=f((n_s, n_r, w), dtype=bool),
+        repeat_c=f((n_s, n_r, w), dtype=bool),
+        last_cum=b((n_s, n_r), -1, dtype=jnp.int32),
+        retry=f((n_s, w), dtype=jnp.int32),
+        quack_time=b((n_s, w), -1, dtype=jnp.int32),
+        deliver_time=b((w,), -1, dtype=jnp.int32),
+        hq_reports=f((n_r, n_s), dtype=jnp.int32),
+        ack_floor=f((n_r,), dtype=jnp.int32),
+        base=jnp.zeros((), dtype=jnp.int32),
+        retired_delivered=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def _sched_arrays(spec: SimSpec):
+    return (jnp.asarray(spec.orig_sender, dtype=jnp.int32),
+            jnp.asarray(spec.orig_recv, dtype=jnp.int32),
+            jnp.asarray(spec.orig_step, dtype=jnp.int32))
+
+
+def _build_run(nspec: SimSpec):
+    """Dense full-stream runner: window = [0, M), no rotation."""
+    sched_full = _sched_arrays(nspec)
+
+    def run(fail: FailArrays):
+        step = _protocol_step(nspec, fail, sched_full, 0, nspec.m)
+        state0 = _init_state(nspec, nspec.m)
+        ts = jnp.arange(nspec.steps, dtype=jnp.int32)
+        return jax.lax.scan(step, state0, ts)
 
     return run
 
 
+@functools.lru_cache(maxsize=64)
+def _compiled_sim(nspec: SimSpec):
+    return jax.jit(_build_run(nspec))
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_batch(nspec: SimSpec):
+    return jax.jit(jax.vmap(_build_run(nspec)))
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_chunk(nspec: SimSpec, w_slots: int, chunk_len: int):
+    """Windowed chunk runner: `chunk_len` rounds at a fixed window base."""
+    osend, orecv, ostep = (np.asarray(a) for a in
+                           (nspec.orig_sender, nspec.orig_recv,
+                            nspec.orig_step))
+    pad = lambda a, fill: jnp.asarray(
+        np.concatenate([a, np.full(w_slots, fill, dtype=a.dtype)]),
+        dtype=jnp.int32)
+    osend_p, orecv_p = pad(osend, 0), pad(orecv, 0)
+    ostep_p = pad(np.minimum(ostep, _NEVER_STEP), _NEVER_STEP)
+
+    def chunk(fail: FailArrays, state: SimState, t0):
+        sl = lambda a: jax.lax.dynamic_slice(a, (state.base,), (w_slots,))
+        sched_w = (sl(osend_p), sl(orecv_p), sl(ostep_p))
+        step = _protocol_step(nspec, fail, sched_w, state.base, w_slots)
+        ts = t0 + jnp.arange(chunk_len, dtype=jnp.int32)
+        return jax.lax.scan(step, state, ts)
+
+    return jax.jit(chunk)
+
+
+def _np_state(state: SimState) -> SimState:
+    return jax.tree_util.tree_map(np.asarray, state)
+
+
+def _rotate(spec: SimSpec, s: SimState, base: int, t_next: int,
+            orig_step_pad: np.ndarray, outs) -> Tuple[SimState, int]:
+    """Advance the window past the GC frontier (host-side, numpy state)."""
+    w = spec.window_slots
+    f = gc_frontier(
+        base=base, t_next=t_next, m=spec.m,
+        known=s.known, bcast_q=s.bcast_q, recv_has=s.recv_has,
+        ack_floor=s.ack_floor, stakes_r=np.asarray(spec.stakes_r),
+        quack_thresh=spec.quack_thresh,
+        orig_step=orig_step_pad[base:base + w],
+        crash_r=np.asarray(spec.crash_r),
+        byz_ack_low=np.asarray(spec.byz_ack_low))
+    if f == 0:
+        return s, base
+    out_quack, out_deliver, out_retry, out_recv = outs
+    out_quack[:, base:base + f] = s.quack_time[:, :f]
+    out_deliver[base:base + f] = s.deliver_time[:f]
+    out_retry[:, base:base + f] = s.retry[:, :f]
+    out_recv[:, base:base + f] = s.recv_has[:, :f]
+
+    def shift(a, fill):
+        tail = np.full(a.shape[:-1] + (f,), fill, dtype=a.dtype)
+        return np.concatenate([a[..., f:], tail], axis=-1)
+
+    rotated = SimState(
+        recv_has=shift(s.recv_has, False), bcast_q=shift(s.bcast_q, False),
+        bcast_done=shift(s.bcast_done, False), known=shift(s.known, False),
+        complaint=shift(s.complaint, False),
+        repeat_c=shift(s.repeat_c, False),
+        last_cum=s.last_cum, retry=shift(s.retry, 0),
+        quack_time=shift(s.quack_time, -1),
+        deliver_time=shift(s.deliver_time, -1),
+        hq_reports=s.hq_reports, ack_floor=s.ack_floor,
+        base=np.int32(base + f),
+        retired_delivered=np.int32(int(s.retired_delivered)
+                                   + int((s.deliver_time[:f] >= 0).sum())))
+    return rotated, base + f
+
+
+def _max_msg_by_round(spec: SimSpec) -> np.ndarray:
+    """r[t] = highest message index dispatched at or before round t."""
+    ostep = np.asarray(spec.orig_step, dtype=np.int64)
+    r = np.full(max(spec.steps, 1), -1, dtype=np.int64)
+    valid = ostep < spec.steps
+    np.maximum.at(r, ostep[valid], np.nonzero(valid)[0])
+    return np.maximum.accumulate(r)
+
+
+def _run_windowed(spec: SimSpec) -> SimResult:
+    nspec = _neutral(spec)
+    # chunk programs are independent of the horizon: share them across runs
+    # that differ only in `steps` (e.g. growing-stream sweeps).
+    cspec = dataclasses.replace(nspec, steps=0)
+    fail = _fail_arrays(spec)
+    w, c_full = spec.window_slots, max(spec.chunk_steps, 1)
+    n_s, n_r, m = spec.n_s, spec.n_r, spec.m
+
+    out_quack = np.full((n_s, m), -1, dtype=np.int32)
+    out_deliver = np.full((m,), -1, dtype=np.int32)
+    out_retry = np.zeros((n_s, m), dtype=np.int32)
+    out_recv = np.zeros((n_r, m), dtype=bool)
+    outs = (out_quack, out_deliver, out_retry, out_recv)
+
+    orig_step_pad = np.concatenate(
+        [np.asarray(spec.orig_step, dtype=np.int64),
+         np.full(w, _NEVER_STEP, dtype=np.int64)])
+    dispatched_by = _max_msg_by_round(spec)
+
+    state = _init_state(nspec, w)
+    base, t = 0, 0
+    bases = [0]
+    metric_parts = []
+    while t < spec.steps:
+        c = min(c_full, spec.steps - t)
+        need = int(dispatched_by[t + c - 1])
+        if need >= base + w:
+            raise ValueError(
+                f"sliding window overflow: round {t + c - 1} dispatches "
+                f"message {need} but the window covers [{base}, {base + w})"
+                f" — the GC frontier is {base} after {t} rounds. Increase "
+                f"SimConfig.window_slots (or use window_slots='auto'), or "
+                f"fall back to the dense path for this scenario.")
+        state, ms = _compiled_chunk(cspec, w, c)(fail, state, jnp.int32(t))
+        metric_parts.append(jax.tree_util.tree_map(np.asarray, ms))
+        t += c
+        if t < spec.steps:
+            host, new_base = _rotate(spec, _np_state(state), base, t,
+                                     orig_step_pad, outs)
+            if new_base != base:
+                state = jax.tree_util.tree_map(jnp.asarray, host)
+                base = new_base
+            bases.append(base)
+
+    # flush the live window into the output buffers
+    s = _np_state(state)
+    live = min(w, m - base)
+    if live > 0:
+        out_quack[:, base:base + live] = s.quack_time[:, :live]
+        out_deliver[base:base + live] = s.deliver_time[:live]
+        out_retry[:, base:base + live] = s.retry[:, :live]
+        out_recv[:, base:base + live] = s.recv_has[:, :live]
+
+    metrics = StepMetrics(*(
+        np.concatenate([getattr(p, name) for p in metric_parts])
+        for name in StepMetrics._fields))
+    return SimResult(
+        spec=spec, metrics=metrics, quack_time=out_quack,
+        deliver_time=out_deliver, retry=out_retry, recv_has=out_recv,
+        gc_frontiers=np.asarray(bases, dtype=np.int64))
+
+
 def run_simulation(spec: SimSpec) -> SimResult:
-    final, ms = _compiled_sim(spec)()
-    final = jax.tree_util.tree_map(np.asarray, final)
+    """Run one spec: windowed when ``spec.window_slots > 0``, else dense."""
+    if spec.window_slots:
+        return _run_windowed(spec)
+    final, ms = _compiled_sim(_neutral(spec))(_fail_arrays(spec))
+    final = _np_state(final)
     ms = jax.tree_util.tree_map(np.asarray, ms)
     return SimResult(
         spec=spec,
@@ -406,3 +664,41 @@ def run_simulation(spec: SimSpec) -> SimResult:
         retry=final.retry,
         recv_has=final.recv_has,
     )
+
+
+def run_simulation_batch(specs: Sequence[SimSpec]) -> List[SimResult]:
+    """Run many failure scenarios of one shape in a single compilation.
+
+    All specs must share every non-failure field (same RSMs, schedules and
+    thresholds — e.g. from ``build_spec`` with different ``FailureScenario``
+    masks); the failure masks are stacked and the dense runner is
+    ``jax.vmap``-ed over them, so a whole sweep costs one compile + one
+    device dispatch instead of one ``lru_cache`` entry per scenario.
+    Windowed specs are executed with the dense kernel (results identical).
+    """
+    specs = list(specs)
+    if not specs:
+        return []
+    nspec = _neutral(specs[0])
+    for s in specs[1:]:
+        if _neutral(s) != nspec:
+            raise ValueError("run_simulation_batch: specs differ outside "
+                             "their failure masks; batch members must share "
+                             "shapes, schedules and thresholds")
+    fails = [_fail_arrays(s) for s in specs]
+    stacked = FailArrays(*(jnp.stack([getattr(f, name) for f in fails])
+                           for name in FailArrays._fields))
+    finals, ms = _compiled_batch(nspec)(stacked)
+    finals = _np_state(finals)
+    ms = jax.tree_util.tree_map(np.asarray, ms)
+    out = []
+    for b, spec in enumerate(specs):
+        out.append(SimResult(
+            spec=spec,
+            metrics=StepMetrics(*(x[b] for x in ms)),
+            quack_time=finals.quack_time[b],
+            deliver_time=finals.deliver_time[b],
+            retry=finals.retry[b],
+            recv_has=finals.recv_has[b],
+        ))
+    return out

@@ -199,6 +199,14 @@ class SimConfig:
     quantum:         DSS message quantum q (messages per scheduling quantum).
     phi:             phi-list bound (selective-repeat width, §4.2).
     seed:            PRNG seed (lottery scheduler only).
+    window_slots:    sliding-window width W for the GC-driven windowed
+                     simulator core: scan state covers only the W in-flight
+                     sequence numbers above the GC frontier (§4.3) instead
+                     of all M. None => dense (full-M) state; "auto" =>
+                     sized from n, window, phi and chunk_steps
+                     (``gc.default_window_slots``); an int fixes W.
+    chunk_steps:     rounds per compiled scan chunk in windowed mode; the
+                     window rotates (GC frontier advances) between chunks.
     """
 
     n_msgs: int = 256
@@ -208,6 +216,17 @@ class SimConfig:
     quantum: int = 64
     phi: int = 32
     seed: int = 0
+    window_slots: Optional[object] = None     # None | "auto" | int
+    chunk_steps: int = 32
+
+    def __post_init__(self):
+        ws = self.window_slots
+        if ws is not None and ws != "auto" and (not isinstance(ws, int)
+                                                or ws <= 0):
+            raise ValueError(f"window_slots must be None, 'auto' or a "
+                             f"positive int, got {ws!r}")
+        if self.chunk_steps <= 0:
+            raise ValueError("chunk_steps must be positive")
 
 
 def lcm_scale_factors(total_s: float, total_r: float) -> Tuple[float, float]:

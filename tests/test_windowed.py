@@ -1,0 +1,213 @@
+"""Sliding-window simulator core: dense-vs-windowed equivalence.
+
+Every fixture from the dense test suite runs three ways — dense jax,
+windowed jax (ring buffers + chunked scans + GC-frontier rotation), and
+the numpy oracle mirroring the window — and all per-message outputs,
+per-round metric streams, and the GC-frontier trajectory itself must
+agree bit-for-bit.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import FailureScenario, RSMConfig, SimConfig
+from repro.core.quack import claim_bitmask, missing_below_horizon
+from repro.core.refsim import run_reference
+from repro.core.simulator import (build_spec, run_simulation,
+                                  run_simulation_batch)
+
+BFT1 = RSMConfig.bft(1)          # n=4, u=r=1
+CFT1 = RSMConfig.cft(1)          # n=3, u=1, r=0
+
+OUTPUTS = ("quack_time", "deliver_time", "retry", "recv_has")
+METRICS = ("cross_msgs", "intra_msgs", "resends", "acks", "delivered",
+           "min_quack_prefix")
+
+# (name, sender, receiver, SimConfig kwargs, failures)
+# window_slots < n_msgs wherever the GC frontier can advance early enough
+# to rotate (exercising ring-buffer shifts); adversarial stalls keep W=M.
+FIXTURES = [
+    ("failure_free", BFT1, BFT1,
+     dict(n_msgs=24, steps=30, window=1, phi=6, window_slots=16,
+          chunk_steps=4),
+     FailureScenario.none()),
+    ("failure_free_w2", BFT1, BFT1,
+     dict(n_msgs=24, steps=30, window=2, phi=6, window_slots=24,
+          chunk_steps=2),
+     FailureScenario.none()),
+    ("crash_sender", BFT1, BFT1,
+     dict(n_msgs=24, steps=150, window=1, phi=6, window_slots=24,
+          chunk_steps=8),
+     FailureScenario(crash_s=(1, -1, -1, -1))),
+    ("byzantine_recv", BFT1, BFT1,
+     dict(n_msgs=24, steps=200, window=1, phi=6, window_slots=24,
+          chunk_steps=16),
+     FailureScenario(byz_recv_drop=(True, False, False, False),
+                     byz_ack_low=(False, True, False, False))),
+    ("crash_plus_byz", BFT1, BFT1,
+     dict(n_msgs=24, steps=240, window=1, phi=6, window_slots=24,
+          chunk_steps=32),
+     FailureScenario(crash_s=(2, -1, -1, -1),
+                     byz_recv_drop=(True, False, False, False))),
+    ("liar_low", BFT1, BFT1,
+     dict(n_msgs=24, steps=150, window=1, phi=6, window_slots=24,
+          chunk_steps=8),
+     FailureScenario(byz_ack_low=(True, False, False, False))),
+    ("cft_dup_resend", CFT1, CFT1,
+     dict(n_msgs=12, steps=120, window=1, phi=6, window_slots=12,
+          chunk_steps=8),
+     FailureScenario(crash_s=(1, -1, -1))),
+    ("gc_stall_defence", BFT1, BFT1,
+     dict(n_msgs=24, steps=300, window=1, phi=6, window_slots=24,
+          chunk_steps=16),
+     FailureScenario(byz_bcast_partial=(True, False, False, False),
+                     bcast_limit=2, crash_r=(-1, 8, -1, -1))),
+    ("staked_dss", RSMConfig(n=4, u=333, r=333,
+                             stakes=(333., 223., 222., 222.)),
+     RSMConfig(n=4, u=333, r=333, stakes=(250., 250., 250., 250.)),
+     dict(n_msgs=24, steps=80, window=2, phi=6, scheduler="dss",
+          quantum=12, window_slots=24, chunk_steps=8),
+     FailureScenario.none()),
+    ("mixed_cft_to_bft", CFT1, BFT1,
+     dict(n_msgs=24, steps=60, window=2, phi=6, window_slots=24,
+          chunk_steps=4),
+     FailureScenario.none()),
+    ("mixed_bft_to_cft", BFT1, CFT1,
+     dict(n_msgs=24, steps=60, window=2, phi=6, window_slots=24,
+          chunk_steps=4),
+     FailureScenario.none()),
+    ("ack_advance_liar", BFT1, BFT1,
+     dict(n_msgs=24, steps=120, window=1, phi=6, window_slots=24,
+          chunk_steps=8),
+     FailureScenario(byz_ack_advance=(3, 0, 0, 0))),
+]
+
+IDS = [f[0] for f in FIXTURES]
+
+
+def _dense(spec):
+    return dataclasses.replace(spec, window_slots=0, chunk_steps=0)
+
+
+@pytest.mark.parametrize("name,snd,rcv,simkw,fails", FIXTURES, ids=IDS)
+def test_windowed_matches_dense(name, snd, rcv, simkw, fails):
+    spec_w = build_spec(snd, rcv, SimConfig(**simkw), fails)
+    assert spec_w.window_slots > 0
+    jw = run_simulation(spec_w)
+    jd = run_simulation(_dense(spec_w))
+    for out in OUTPUTS:
+        assert np.array_equal(getattr(jw, out), getattr(jd, out)), out
+    for mname in METRICS:
+        assert np.array_equal(getattr(jw.metrics, mname),
+                              getattr(jd.metrics, mname)), mname
+    # the frontier only moves forward and never overtakes the quack stream
+    assert (np.diff(jw.gc_frontiers) >= 0).all()
+    assert jw.gc_frontiers[-1] <= spec_w.m
+
+
+@pytest.mark.parametrize("name,snd,rcv,simkw,fails", FIXTURES[:6], ids=IDS[:6])
+def test_refsim_mirrors_window_rotation(name, snd, rcv, simkw, fails):
+    """The numpy oracle replays the same frontier trajectory and proves
+    each retirement safe (snapshot assertions inside run_reference)."""
+    spec_w = build_spec(snd, rcv, SimConfig(**simkw), fails)
+    jw = run_simulation(spec_w)
+    rw = run_reference(spec_w)          # asserts retirement safety itself
+    for jout, rout in zip(OUTPUTS, ("quack_time", "deliver_time", "retry",
+                                    "recv_has")):
+        assert np.array_equal(getattr(jw, jout), getattr(rw, rout)), jout
+    assert np.array_equal(jw.gc_frontiers, rw.gc_frontiers)
+    if rw.gc_frontiers[-1] > 0:
+        # §4.3: a retired slot is QUACKed at every sender — its stake-
+        # weighted claim mass reached u_r + 1 before it was forgotten.
+        assert rw.retired_quack_margin >= spec_w.quack_thresh
+
+
+def test_rotation_actually_happens():
+    spec = build_spec(BFT1, BFT1,
+                      SimConfig(n_msgs=24, steps=30, window=1, phi=6,
+                                window_slots=16, chunk_steps=4))
+    jw = run_simulation(spec)
+    assert jw.gc_frontiers.max() > 0          # window really slid
+    assert (jw.deliver_time >= 0).all()
+
+
+def test_window_overflow_raises():
+    """A window too small for the in-flight set fails loudly, not wrongly."""
+    spec = build_spec(BFT1, BFT1,
+                      SimConfig(n_msgs=64, steps=40, window=4, phi=6,
+                                window_slots=8, chunk_steps=4))
+    with pytest.raises(ValueError, match="window overflow"):
+        run_simulation(spec)
+
+
+def test_long_stream_constant_state():
+    """Long-horizon run: scan state is O(W), not O(M), and the stream
+    completes — the paper's P1 constant-metadata invariant applied to the
+    simulator itself."""
+    m = 20_000
+    sim = SimConfig(n_msgs=m, steps=m // 16 + 60, window=4, phi=32,
+                    window_slots="auto", chunk_steps=32)
+    spec = build_spec(BFT1, BFT1, sim)
+    assert spec.window_slots < m // 4          # genuinely windowed
+    small = build_spec(BFT1, BFT1, dataclasses.replace(
+        sim, n_msgs=m // 10, steps=m // 160 + 60))
+    assert spec.scan_state_nbytes() == small.scan_state_nbytes()
+    r = run_simulation(spec)
+    assert (r.deliver_time >= 0).all()
+    assert (r.quack_time >= 0).all()
+    assert r.total_cross_msgs() == m           # P1: one cross copy per msg
+    assert r.gc_frontiers[-1] == m
+
+
+def test_batch_matches_sequential():
+    sim = SimConfig(n_msgs=24, steps=120, window=1, phi=6)
+    scenarios = [
+        FailureScenario.none(),
+        FailureScenario(crash_s=(1, -1, -1, -1)),
+        FailureScenario(byz_recv_drop=(True, False, False, False),
+                        byz_ack_low=(False, True, False, False)),
+        FailureScenario(byz_bcast_partial=(True, False, False, False),
+                        bcast_limit=2, crash_r=(-1, 8, -1, -1)),
+        FailureScenario.crash_fraction(4, 4, 0.33, seed=1),
+    ]
+    specs = [build_spec(BFT1, BFT1, sim, f) for f in scenarios]
+    batched = run_simulation_batch(specs)
+    for spec, br in zip(specs, batched):
+        sr = run_simulation(spec)
+        for out in OUTPUTS:
+            assert np.array_equal(getattr(br, out), getattr(sr, out)), out
+        for mname in METRICS:
+            assert np.array_equal(getattr(br.metrics, mname),
+                                  getattr(sr.metrics, mname)), mname
+
+
+def test_batch_rejects_mismatched_shapes():
+    a = build_spec(BFT1, BFT1, SimConfig(n_msgs=24, steps=40, window=1,
+                                         phi=6))
+    b = build_spec(BFT1, BFT1, SimConfig(n_msgs=32, steps=40, window=1,
+                                         phi=6))
+    with pytest.raises(ValueError, match="failure masks"):
+        run_simulation_batch([a, b])
+
+
+def test_offset_quack_ops_match_dense_slice():
+    """Windowed claim/missing ops == dense ops restricted to the window,
+    whenever everything below the base is received (the GC invariant)."""
+    rng = np.random.RandomState(0)
+    m, base, w, phi = 40, 12, 20, 3
+    eff = rng.rand(5, m) < 0.6
+    eff[:, :base] = True                       # window invariant
+    cum_d, claim_d, known_d = claim_bitmask(eff, phi)
+    miss_d = missing_below_horizon(eff, phi)
+    win = eff[:, base:base + w]
+    cum_w, claim_w, known_w = claim_bitmask(win, phi, base, m)
+    miss_w = missing_below_horizon(win, phi, base)
+    assert np.array_equal(np.asarray(cum_w), np.asarray(cum_d))
+    assert np.array_equal(np.asarray(claim_w),
+                          np.asarray(claim_d)[:, base:base + w])
+    assert np.array_equal(np.asarray(known_w),
+                          np.asarray(known_d)[:, base:base + w])
+    assert np.array_equal(np.asarray(miss_w),
+                          np.asarray(miss_d)[:, base:base + w])
