@@ -3,11 +3,18 @@
 The dense path carries (n_s, n_r, M) per-message state through the whole
 ``lax.scan`` — memory and compile time grow with stream length M. The
 windowed path (GC-driven ring buffers, §4.3) keeps O(W) state regardless
-of M. This bench sweeps M in {256, 4096, 65536} and reports, per path,
-the first-call wall time (includes compile), steady-state wall time, and
-the scan-state footprint in bytes.
+of M, with the GC frontier and ring rotation computed *in-graph*: the
+host drains a bounded O(W) output queue per chunk and never round-trips
+the scan state. This bench sweeps M and reports, per path, the
+first-call wall time (includes compile), steady-state wall time, and the
+scan-state footprint in bytes.
+
+A second section times batched windowed failure sweeps: B scenarios as
+one ``jax.vmap``-ed chunk stream with per-scenario window bases
+(``run_simulation_batch``) against B sequential windowed runs.
 
   PYTHONPATH=src python -m benchmarks.bench_windowed [--dense-max N]
+      [--sizes 256,4096,65536,102400] [--batch B]
 """
 
 from __future__ import annotations
@@ -15,10 +22,13 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.core import RSMConfig, SimConfig
-from repro.core.simulator import build_spec, run_simulation
+import numpy as np
 
-SIZES = (256, 4096, 65536)
+from repro.core import FailureScenario, RSMConfig, SimConfig
+from repro.core.simulator import build_spec, run_simulation, \
+    run_simulation_batch
+
+SIZES = (256, 4096, 65536, 102400)
 SENDER = RSMConfig.bft(1)
 RECEIVER = RSMConfig.bft(1)
 SEND_WINDOW = 4
@@ -40,8 +50,12 @@ def _run(m: int, windowed: bool):
     res = run_simulation(spec)
     warm = time.time() - t0
     ok = bool((res.deliver_time >= 0).all() and (res.quack_time >= 0).all())
+    # 'auto' clamps to the dense kernel when W >= M — label the row by the
+    # kernel that actually ran so small sizes don't fake a comparison
+    kernel = ("windowed" if spec.window_slots else "dense(auto)") \
+        if windowed else "dense"
     return {
-        "path": "windowed" if windowed else "dense",
+        "path": kernel,
         "n_msgs": m,
         "window_slots": spec.window_slots or spec.m,
         "state_bytes": spec.scan_state_nbytes(),
@@ -51,9 +65,9 @@ def _run(m: int, windowed: bool):
     }
 
 
-def rows(dense_max: int = 4096):
+def rows(dense_max: int = 4096, sizes=SIZES):
     out = []
-    for m in SIZES:
+    for m in sizes:
         out.append(_run(m, windowed=True))
         if m <= dense_max:
             out.append(_run(m, windowed=False))
@@ -67,14 +81,70 @@ def rows(dense_max: int = 4096):
     return out
 
 
-def main(dense_max: int = 4096):
-    rs = rows(dense_max)
+def batch_rows(m: int = 8192, n_scenarios: int = 4):
+    """Batched windowed sweep vs the same scenarios run sequentially."""
+    sim = _sim(m, windowed=True)
+    n = SENDER.n
+    # crashes fire mid-run (different placement per seed), so the
+    # per-scenario GC frontiers genuinely diverge inside the one dispatch.
+    scenarios = [FailureScenario.none()]
+    scenarios += [FailureScenario.crash_fraction(n, n, 0.25, seed=s,
+                                                 at_step=8)
+                  for s in range(1, n_scenarios)]
+    specs = [build_spec(SENDER, RECEIVER, sim, f) for f in scenarios]
+    t0 = time.time()
+    runs = run_simulation_batch(specs)
+    cold = time.time() - t0
+    t0 = time.time()
+    runs = run_simulation_batch(specs)
+    warm = time.time() - t0
+    seq = [run_simulation(s) for s in specs]   # warm the batch-of-1 programs
+    t0 = time.time()
+    seq = [run_simulation(s) for s in specs]
+    seq_warm = time.time() - t0
+    # crashed senders legitimately leave their messages undelivered, so
+    # completeness is judged on the failure-free scenario only; the crash
+    # scenarios must still match their sequential runs bit-for-bit.
+    ok = bool((runs[0].deliver_time >= 0).all()) and all(
+        np.array_equal(np.asarray(getattr(b, out)), np.asarray(getattr(s, out)))
+        for b, s in zip(runs, seq)
+        for out in ("quack_time", "deliver_time", "retry", "recv_has"))
+    # report the kernel/width the run *ended* with: 'auto' clamps to dense
+    # when W >= M, and adaptive growth / dense fallback can change the
+    # width mid-run (final_window_slots == M signals dense).
+    final_w = runs[0].final_window_slots
+    return {
+        "n_msgs": m,
+        "scenarios": len(specs),
+        "kernel": ("windowed" if specs[0].window_slots and final_w < specs[0].m
+                   else "dense"),
+        "window_slots": final_w,
+        "batched_cold_s": cold,
+        "batched_warm_s": warm,
+        "sequential_warm_s": seq_warm,
+        "complete": bool(ok),
+    }
+
+
+def main(dense_max: int = 4096, sizes=SIZES, batch: int = 4):
+    rs = rows(dense_max, sizes)
     print("# windowed vs dense simulator core (BFT1<->BFT1, window=4)")
     print("path,n_msgs,window_slots,state_bytes,cold_s,warm_s,complete")
     for r in rs:
         print(f"{r['path']},{r['n_msgs']},{r['window_slots']},"
               f"{r['state_bytes']},{r['cold_s']:.2f},{r['warm_s']:.2f},"
               f"{r['complete']}")
+    if batch > 0:
+        b = batch_rows(m=min(max(sizes), 8192), n_scenarios=batch)
+        print("# batched failure sweep (windowed kernel => per-scenario "
+              "window bases)")
+        print("n_msgs,scenarios,kernel,window_slots,batched_cold_s,"
+              "batched_warm_s,sequential_warm_s,complete")
+        print(f"{b['n_msgs']},{b['scenarios']},{b['kernel']},"
+              f"{b['window_slots']},"
+              f"{b['batched_cold_s']:.2f},{b['batched_warm_s']:.2f},"
+              f"{b['sequential_warm_s']:.2f},{b['complete']}")
+        rs.append(b)
     return rs
 
 
@@ -83,5 +153,14 @@ if __name__ == "__main__":
     ap.add_argument("--dense-max", type=int, default=4096,
                     help="largest n_msgs to run on the dense path "
                          "(beyond this only the windowed path runs)")
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma-separated n_msgs sweep (default "
+                         "256,4096,65536,102400); tiny values make a CI "
+                         "smoke run")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="scenarios in the batched windowed sweep "
+                         "(0 disables the section)")
     args = ap.parse_args()
-    main(args.dense_max)
+    sizes = (tuple(int(s) for s in args.sizes.split(","))
+             if args.sizes else SIZES)
+    main(args.dense_max, sizes, args.batch)

@@ -47,6 +47,11 @@ def failure_runs(n_seeds: int = 4):
     All placements of one size share shapes/schedules, so the whole seed
     sweep runs as ONE vmap-batched simulation (one compile + one dispatch
     per n) instead of one cached program per scenario.
+    ``window_slots="auto"`` picks the kernel: dense here (M=128 is below
+    the auto window width — and heavy-crash sweeps pin the GC frontier,
+    which the adaptive overflow policy would turn into a dense fallback
+    anyway); windowed+batched engages automatically on larger,
+    lighter-failure sweeps (see ``bench_windowed --batch``).
     """
     rows = []
     for n in (4, 10, 19):
@@ -55,7 +60,8 @@ def failure_runs(n_seeds: int = 4):
         scenarios = [FailureScenario.crash_fraction(n, n, 0.33, seed=s)
                      for s in range(1, n_seeds + 1)]
         runs = run_picsou_batch(
-            cfg, cfg, SimConfig(n_msgs=128, steps=600, window=2, phi=32),
+            cfg, cfg, SimConfig(n_msgs=128, steps=600, window=2, phi=32,
+                                window_slots="auto"),
             scenarios)
         resend_factor = float(np.mean([r.resends_per_msg for r in runs]))
         net = NetworkModel.lan(1e6)

@@ -63,8 +63,8 @@ def kernels():
 def windowed():
     from benchmarks import bench_windowed as m
     rs = m.main()
-    big = [r for r in rs if r["path"] == "windowed"][-1]
-    dense_big = [r for r in rs if r["path"] == "dense"
+    big = [r for r in rs if r.get("path") == "windowed"][-1]
+    dense_big = [r for r in rs if r.get("path") == "dense"
                  and r["n_msgs"] == big["n_msgs"]][0]
     ratio = dense_big["state_bytes"] / max(big["state_bytes"], 1)
     return (f"state@{big['n_msgs']}={big['state_bytes']}B"

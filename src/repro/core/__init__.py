@@ -11,7 +11,7 @@ Public API:
 """
 
 from .gc import (ack_floor_from_reports, collectable, default_window_slots,
-                 gc_frontier)
+                 gc_frontier, gc_frontier_device, grow_window)
 from .protocols import (C3BRun, analytic_throughput, ata_loads, ost_loads,
                         picsou_loads, run_picsou, run_picsou_batch)
 from .quack import (claim_bitmask, cumulative_ack, missing_below_horizon,
@@ -31,6 +31,7 @@ __all__ = [
     "RSMConfig", "NetworkModel", "SimConfig", "FailureScenario",
     "SimSpec", "SimResult", "FailArrays", "build_spec", "run_simulation",
     "run_simulation_batch", "default_window_slots", "gc_frontier",
+    "gc_frontier_device", "grow_window",
     "C3BRun", "run_picsou", "run_picsou_batch", "analytic_throughput",
     "picsou_loads", "ata_loads", "ost_loads",
     "cumulative_ack", "claim_bitmask", "missing_below_horizon",

@@ -18,6 +18,8 @@ intra-RSM broadcast already).
 
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 
 import jax.numpy as jnp
@@ -25,7 +27,7 @@ import jax.numpy as jnp
 from .quack import weighted_quorum_prefix
 
 __all__ = ["collectable", "ack_floor_from_reports", "gc_frontier",
-           "default_window_slots"]
+           "gc_frontier_device", "grow_window", "default_window_slots"]
 
 
 def collectable(quacked_prefix: jnp.ndarray, m: int) -> jnp.ndarray:
@@ -93,6 +95,58 @@ def gc_frontier(*, base: int, t_next: int, m: int,
     ok = (quacked_everywhere & dispatched & no_pending_bcast & eff_full
           & (abs_idx < m))
     return int(np.cumprod(ok.astype(np.int64)).sum())
+
+
+def gc_frontier_device(*, base, t_next, m: int,
+                       known, bcast_q, recv_has, ack_floor,
+                       stakes_r, quack_thresh: float,
+                       orig_step, crash_r, byz_ack_low):
+    """Traced (jnp) port of :func:`gc_frontier` — runs inside the chunk.
+
+    Same retirement rule, evaluated on device so the sliding-window
+    simulator can rotate its ring buffers in-graph instead of pulling the
+    state to the host every chunk. ``base``/``t_next`` may be traced
+    scalars and every array a traced value (including under ``jax.vmap``
+    with per-scenario window bases). The stake einsum is float32, exactly
+    like the compiled QUACK decision and the numpy oracle above, so all
+    three agree bit-for-bit.
+
+    ``orig_step`` is the (W,) window slice of the padded dispatch
+    schedule; ``crash_r``/``byz_ack_low`` come from the traced
+    ``FailArrays``. Returns a () int32 — the number of leading window
+    slots that may be retired.
+    """
+    w = known.shape[-1]
+    abs_idx = (base + jnp.arange(w, dtype=jnp.int32)).astype(jnp.int32)
+    w_known = jnp.einsum("ljm,j->lm", known.astype(jnp.float32),
+                         stakes_r.astype(jnp.float32))
+    quacked_everywhere = (w_known >= jnp.float32(quack_thresh)).all(axis=0)
+    dispatched = orig_step < t_next
+    no_pending_bcast = ~bcast_q.any(axis=0)
+    relevant = ((crash_r < 0) | (crash_r > t_next)) & ~byz_ack_low
+    eff = recv_has | (abs_idx[None, :] < ack_floor[:, None])
+    eff_full = (eff | ~relevant[:, None]).all(axis=0)
+    ok = (quacked_everywhere & dispatched & no_pending_bcast & eff_full
+          & (abs_idx < m))
+    return jnp.cumprod(ok.astype(jnp.int32)).sum().astype(jnp.int32)
+
+
+def grow_window(w: int, base: int, need: int, m: int) -> Optional[int]:
+    """Adaptive window sizing on overflow (§4.3 under a stalled frontier).
+
+    A Byzantine stall can pin the GC frontier while originals keep
+    dispatching, so the highest in-flight sequence number ``need`` outruns
+    the window ``[base, base + w)``. Double ``w`` until the window covers
+    ``need`` again; if the required width would reach the full stream
+    length ``m``, windowing buys nothing over the dense state — return
+    ``None`` to signal the caller to fall back to the dense kernel.
+    """
+    new_w = max(int(w), 1)
+    while need >= base + new_w:
+        new_w *= 2
+    if new_w >= m:
+        return None
+    return new_w
 
 
 def default_window_slots(n_s: int, n_r: int, send_window: int, phi: int,

@@ -16,6 +16,12 @@ by every replica whose acks still matter, so the absolute cumulative ack
 is ``base +`` the in-window prefix and gap ranks start at zero at the
 window base. ``base == 0`` with a full-width array recovers the dense
 semantics exactly.
+
+``base`` may be a python int, a traced scalar (device-side window
+rotation carries it as scan state), or a per-scenario batch of scalars
+under ``jax.vmap`` (batched windowed sweeps) — all offset arithmetic is
+normalized to int32 so the three instantiations produce bit-identical
+programs.
 """
 
 from __future__ import annotations
@@ -39,6 +45,7 @@ def cumulative_ack(received: jnp.ndarray, base=0) -> jnp.ndarray:
     the absolute index of column 0 (window invariant: everything below it
     counts as received).
     """
+    base = jnp.asarray(base, dtype=jnp.int32)
     prefix = jnp.cumprod(received.astype(jnp.int32), axis=-1)
     return (base + prefix.sum(axis=-1)).astype(jnp.int32)
 
@@ -53,6 +60,7 @@ def missing_below_horizon(received: jnp.ndarray, phi: int,
     the window columns; gaps can only exist at or above ``base``.
     """
     w = received.shape[-1]
+    base = jnp.asarray(base, dtype=jnp.int32)
     idx = base + jnp.arange(w, dtype=jnp.int32)
     # top[j] = 1 + highest received index (base if nothing in-window)
     any_recv = received.any(axis=-1)
@@ -79,8 +87,10 @@ def claim_bitmask(received: jnp.ndarray, phi: int, base=0, total=None):
     (``total`` must be given explicitly when ``base`` is traced).
     """
     w = received.shape[-1]
+    base = jnp.asarray(base, dtype=jnp.int32)
     if total is None:
         total = base + w
+    total = jnp.asarray(total, dtype=jnp.int32)
     idx = base + jnp.arange(w, dtype=jnp.int32)
     cum = cumulative_ack(received, base)
     # horizon: everything strictly below the (phi+1)-th missing index is

@@ -9,7 +9,11 @@ For a windowed spec (``spec.window_slots > 0``) the oracle also mirrors
 the sliding-window machinery: it keeps full dense state (it is the
 *oracle*, it never forgets) but advances the same GC frontier with the
 same shared ``gc.gc_frontier`` rule at the same chunk boundaries as the
-jax windowed path, snapshots every retired slot's outputs at retirement
+jax windowed path — including the adaptive overflow policy
+(``gc.grow_window``: widen the mirrored window 2x when a stalled frontier
+would overflow it, or mark the run as fallen back to dense, in which case
+``gc_frontiers`` collapses to the trivial ``[0]`` trajectory exactly like
+``SimResult``) — snapshots every retired slot's outputs at retirement
 time, and asserts at the end of the run that none of them ever changed
 afterwards. That is the ground truth for the windowed core: if the
 retirement rule ever forgot a slot whose state could still move, the
@@ -29,7 +33,8 @@ from typing import List, Optional
 import numpy as np
 
 from .gc import gc_frontier
-from .simulator import SimSpec, _NEVER_STEP
+from .simulator import (SimSpec, _NEVER_STEP, _max_msg_by_round,
+                        _widen_on_overflow)
 
 __all__ = ["run_reference"]
 
@@ -129,16 +134,32 @@ def run_reference(spec: SimSpec) -> RefResult:
     chunk = max(spec.chunk_steps, 1)
     base = 0
     bases = [0] if win else None
+    dense_fallback = False
     retired_snaps = []        # (k, quack_time col, deliver, retry col, recv col)
     retired_margin = np.inf
+    # pad enough for the widest window adaptive growth can reach (< m)
     orig_step_pad = np.concatenate(
-        [orig_step, np.full(max(win, 1), _NEVER_STEP, dtype=orig_step.dtype)])
+        [orig_step, np.full(max(win, 1) + m, _NEVER_STEP,
+                            dtype=orig_step.dtype)])
+    dispatched_by = _max_msg_by_round(spec) if win else None
 
     def quacked_at(l: int) -> np.ndarray:
         w = (known[l].astype(np.float64) * st_r[:, None]).sum(axis=0)
         return w >= spec.quack_thresh
 
     for t in range(spec.steps):
+        # (0) window mirror: adaptive overflow policy at chunk starts,
+        # exactly where the jax windowed path checks before a chunk.
+        if win and not dense_fallback and t % chunk == 0:
+            chunk_end = min(t + chunk, spec.steps) - 1
+            need = int(dispatched_by[chunk_end])
+            if need >= base + win:
+                new_w = _widen_on_overflow(spec, win, base, need, chunk_end)
+                if new_w is None:
+                    dense_fallback = True
+                else:
+                    win = new_w
+
         alive_s = (crash_s < 0) | (t < crash_s)
         alive_r = (crash_r < 0) | (t < crash_r)
 
@@ -238,9 +259,11 @@ def run_reference(spec: SimSpec) -> RefResult:
         resend_hist.append(len(resends))
 
         # (6) window mirror: advance the GC frontier at chunk boundaries,
-        # exactly where the jax windowed path rotates its ring buffers.
+        # exactly where the jax windowed path rotates its ring buffers
+        # in-graph.
         t_next = t + 1
-        if win and t_next % chunk == 0 and t_next < spec.steps:
+        if (win and not dense_fallback and t_next % chunk == 0
+                and t_next < spec.steps):
             lo, hi = base, base + win
             f = gc_frontier(
                 base=base, t_next=t_next, m=m,
@@ -271,9 +294,15 @@ def run_reference(spec: SimSpec) -> RefResult:
         assert np.array_equal(rh, recv_has[:, k]), (
             f"retired slot {k}: recv_has changed after retirement")
 
+    if win and dense_fallback:
+        frontiers = np.zeros(1, dtype=np.int64)   # mirrors SimResult
+    elif win:
+        frontiers = np.asarray(bases, dtype=np.int64)
+    else:
+        frontiers = None
     return RefResult(
         quack_time=quack_time, deliver_time=deliver_time, retry=retry,
         recv_has=recv_has, cross_msgs=np.array(cross_hist),
         intra_msgs=np.array(intra_hist), resends=np.array(resend_hist),
-        gc_frontiers=(np.asarray(bases, dtype=np.int64) if win else None),
+        gc_frontiers=frontiers,
         retired_quack_margin=(retired_margin if win else None))

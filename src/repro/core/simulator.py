@@ -11,17 +11,34 @@ synchronous round (one cross-RSM RTT).
 Per-message state lives in a **sliding window**: each message-indexed array
 holds ``W = spec.window_slots`` columns covering absolute sequence numbers
 ``[base, base + W)``. The run is split into compiled chunks of
-``spec.chunk_steps`` rounds; between chunks the host advances ``base`` past
-the GC frontier (``gc.gc_frontier`` — the prefix both sides may forget,
-§4.3), streaming the retired columns' quack/deliver/retry/recv outputs into
-host buffers and refilling the tail with fresh slots. Failure-free, the
-frontier tracks the stream, so device state and compile time are O(W) —
-*independent of the stream length M* — which is exactly the paper's P1
-constant-metadata invariant applied to the simulator itself. The dense path
-(``window_slots == 0``) is the same step function instantiated at
-``base=0, W=M`` with no rotation, and the two are bit-identical wherever
-the window is wide enough to hold every in-flight message
-(``tests/test_windowed.py``).
+``spec.chunk_steps`` rounds; at the end of each chunk the GC frontier
+(``gc.gc_frontier_device`` — the prefix both sides may forget, §4.3) is
+computed *in-graph* and the ring buffers rotate past it on device
+(``lax.dynamic_slice`` shift with ``base`` carried as traced scan state).
+The retired columns' quack/deliver/retry/recv outputs leave the device
+through a bounded O(W) output queue (``ChunkQueue``) that the host drains
+once per chunk — the scan state itself never makes a host round-trip until
+the final flush. Failure-free, the frontier tracks the stream, so device
+state and compile time are O(W) — *independent of the stream length M* —
+which is exactly the paper's P1 constant-metadata invariant applied to the
+simulator itself. The dense path (``window_slots == 0``) is the same step
+function instantiated at ``base=0, W=M`` with no rotation, and the two are
+bit-identical wherever the window is wide enough to hold every in-flight
+message (``tests/test_windowed.py``).
+
+Window overflow (a Byzantine stall pinning the frontier while originals
+keep dispatching) no longer fails the run: with
+``SimConfig.adaptive_window`` (the default) the window grows 2x — the
+chunk program is re-instantiated at the wider W and the scan state
+migrated on device — and when the required W would reach M the run falls
+back to the dense kernel automatically (``gc.grow_window``). Setting
+``adaptive_window=False`` restores the strict ``ValueError``.
+
+Because ``base`` is traced state, the windowed chunk also ``jax.vmap``s:
+``run_simulation_batch`` executes windowed specs with **per-scenario
+window bases**, so whole failure sweeps (fig8/fig9) run windowed *and*
+batched in one compilation instead of falling back to the O(M) dense
+kernel.
 
 Semantics of a round ``t`` (matching Figure 3/4/5/6 of the paper):
   1. intra-RSM broadcasts queued at t-1 land;
@@ -54,7 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import scheduler as sched
-from .gc import default_window_slots, gc_frontier
+from .gc import default_window_slots, gc_frontier_device, grow_window
 from .quack import claim_bitmask, missing_below_horizon, weighted_quorum_prefix
 from .types import (COUNTER_BYTES, MAC_BYTES, SEQNO_BYTES, FailureScenario,
                     NetworkModel, RSMConfig, SimConfig, lcm_scale_factors)
@@ -96,18 +113,20 @@ class SimSpec:
     bcast_limit: int
     window_slots: int = 0             # 0 => dense (full-M) state
     chunk_steps: int = 0              # rounds per compiled chunk (windowed)
+    adaptive_window: bool = True      # grow W / dense-fallback on overflow
 
     def scan_state_nbytes(self) -> int:
-        """Device bytes of the per-round scan state (the P1 footprint)."""
+        """Device bytes of the per-round scan state (the P1 footprint).
+
+        Derived from ``jax.eval_shape`` of the actual carried ``SimState``
+        so it cannot drift from the implementation
+        (``tests/test_windowed.py`` verifies it against the state a real
+        run carries).
+        """
         w = self.window_slots or self.m
-        n_s, n_r = self.n_s, self.n_r
-        return (3 * n_r * w                # recv_has / bcast_q / bcast_done
-                + 3 * n_s * n_r * w        # known / complaint / repeat_c
-                + 4 * (n_s * n_r           # last_cum
-                       + 2 * n_s * w       # retry / quack_time
-                       + w                 # deliver_time
-                       + n_r * n_s + n_r   # hq_reports / ack_floor
-                       + 2))               # base / retired_delivered
+        state = jax.eval_shape(lambda: _init_state(self, w))
+        return sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(state))
 
 
 class FailArrays(NamedTuple):
@@ -149,6 +168,24 @@ class StepMetrics(NamedTuple):
     min_quack_prefix: jnp.ndarray  # min honest-sender quacked prefix
 
 
+class ChunkQueue(NamedTuple):
+    """Bounded device-side output queue, drained by the host once per chunk.
+
+    Holds the pre-rotation window outputs plus (base, count): columns
+    ``[0, count)`` are the slots this chunk's in-graph rotation retired,
+    covering absolute sequence numbers ``[base, base + count)``. O(W)
+    regardless of stream length — the only per-chunk device->host traffic
+    besides the round metrics.
+    """
+
+    quack_time: jnp.ndarray    # (n_s, W) pre-rotation
+    deliver_time: jnp.ndarray  # (W,)
+    retry: jnp.ndarray         # (n_s, W)
+    recv_has: jnp.ndarray      # (n_r, W)
+    base: jnp.ndarray          # () int32 — window base before rotation
+    count: jnp.ndarray         # () int32 — slots retired by this rotation
+
+
 @dataclasses.dataclass
 class SimResult:
     spec: SimSpec
@@ -157,7 +194,12 @@ class SimResult:
     deliver_time: np.ndarray              # (M,)
     retry: np.ndarray                     # (n_s, M)
     recv_has: np.ndarray                  # (n_r, M)
-    gc_frontiers: Optional[np.ndarray] = None  # window base per chunk
+    # window base per chunk boundary; dense runs report the trivial
+    # single-entry trajectory [0] so every path populates the field.
+    gc_frontiers: Optional[np.ndarray] = None
+    # window width the run ended with (== m for dense / dense-fallback
+    # runs; > spec.window_slots when adaptive growth kicked in).
+    final_window_slots: Optional[int] = None
 
     # --- derived -------------------------------------------------------
     def completion_step(self) -> int:
@@ -247,6 +289,8 @@ def build_spec(sender: RSMConfig, receiver: RSMConfig,
     elif ws == "auto":
         w_slots = default_window_slots(n_s, n_r, sim.window, sim.phi,
                                        sim.chunk_steps)
+        if w_slots >= m:
+            w_slots = 0        # window >= stream: dense is strictly better
     else:
         w_slots = int(ws)
 
@@ -272,6 +316,7 @@ def build_spec(sender: RSMConfig, receiver: RSMConfig,
         bcast_limit=failures.bcast_limit,
         window_slots=w_slots,
         chunk_steps=sim.chunk_steps if w_slots else 0,
+        adaptive_window=sim.adaptive_window,
     )
 
 
@@ -297,7 +342,7 @@ def _neutral(spec: SimSpec) -> SimSpec:
         byz_send_drop=(False,) * n_s, byz_recv_drop=(False,) * n_r,
         byz_ack_advance=(0,) * n_r, byz_ack_low=(False,) * n_r,
         byz_bcast_partial=(False,) * n_r, bcast_limit=0,
-        window_slots=0, chunk_steps=0)
+        window_slots=0, chunk_steps=0, adaptive_window=True)
 
 
 def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
@@ -462,20 +507,29 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
     return step
 
 
+# window-indexed SimState fields -> neutral fill for a fresh slot. The
+# single source of truth for _init_state, _rotate_device and _grow_state,
+# so the three constructors cannot drift when a field is added (a wrong
+# tail fill would compile fine and corrupt only long/adversarial runs).
+_WINDOW_FILLS = dict(recv_has=False, bcast_q=False, bcast_done=False,
+                     known=False, complaint=False, repeat_c=False,
+                     retry=0, quack_time=-1, deliver_time=-1)
+
+
 def _init_state(spec: SimSpec, w: int) -> SimState:
     n_s, n_r = spec.n_s, spec.n_r
-    f, b = jnp.zeros, jnp.full
+    shapes = dict(recv_has=(n_r, w), bcast_q=(n_r, w), bcast_done=(n_r, w),
+                  known=(n_s, n_r, w), complaint=(n_s, n_r, w),
+                  repeat_c=(n_s, n_r, w), retry=(n_s, w),
+                  quack_time=(n_s, w), deliver_time=(w,))
+    window = {
+        name: jnp.full(shapes[name], fill,
+                       dtype=(bool if isinstance(fill, bool) else jnp.int32))
+        for name, fill in _WINDOW_FILLS.items()}
+    f = jnp.zeros
     return SimState(
-        recv_has=f((n_r, w), dtype=bool),
-        bcast_q=f((n_r, w), dtype=bool),
-        bcast_done=f((n_r, w), dtype=bool),
-        known=f((n_s, n_r, w), dtype=bool),
-        complaint=f((n_s, n_r, w), dtype=bool),
-        repeat_c=f((n_s, n_r, w), dtype=bool),
-        last_cum=b((n_s, n_r), -1, dtype=jnp.int32),
-        retry=f((n_s, w), dtype=jnp.int32),
-        quack_time=b((n_s, w), -1, dtype=jnp.int32),
-        deliver_time=b((w,), -1, dtype=jnp.int32),
+        **window,
+        last_cum=jnp.full((n_s, n_r), -1, dtype=jnp.int32),
         hq_reports=f((n_r, n_s), dtype=jnp.int32),
         ack_floor=f((n_r,), dtype=jnp.int32),
         base=jnp.zeros((), dtype=jnp.int32),
@@ -512,9 +566,42 @@ def _compiled_batch(nspec: SimSpec):
     return jax.jit(jax.vmap(_build_run(nspec)))
 
 
-@functools.lru_cache(maxsize=64)
-def _compiled_chunk(nspec: SimSpec, w_slots: int, chunk_len: int):
-    """Windowed chunk runner: `chunk_len` rounds at a fixed window base."""
+def _rotate_device(s: SimState, f, w: int) -> SimState:
+    """Shift the ring buffers left by the (traced) GC frontier ``f``.
+
+    Pure jnp — runs inside the compiled chunk. Each window-indexed array
+    is extended by W fresh-fill slots and re-sliced at offset ``f``
+    (``lax.dynamic_slice``), which is the in-graph form of the ring
+    rotation: columns ``[f, W)`` move to ``[0, W - f)`` and the tail
+    refills with fresh slots. ``base`` advances by ``f`` as traced state.
+    """
+    col = jnp.arange(w, dtype=jnp.int32)
+
+    def shift(a, fill):
+        ext = jnp.concatenate(
+            [a, jnp.full(a.shape[:-1] + (w,), fill, dtype=a.dtype)],
+            axis=-1)
+        return jax.lax.dynamic_slice_in_dim(ext, f, w, axis=-1)
+
+    retired_deliv = ((s.deliver_time >= 0) & (col < f)).sum()
+    return s._replace(
+        **{name: shift(getattr(s, name), fill)
+           for name, fill in _WINDOW_FILLS.items()},
+        base=(s.base + f).astype(jnp.int32),
+        retired_delivered=(s.retired_delivered
+                           + retired_deliv).astype(jnp.int32))
+
+
+def _build_chunk(nspec: SimSpec, w_slots: int, chunk_len: int, rotate: bool):
+    """Windowed chunk: ``chunk_len`` rounds + in-graph GC rotation.
+
+    ``state.base`` is traced, so one compilation serves every window
+    position (and, vmapped, every scenario's position). When ``rotate``
+    the chunk computes the GC frontier in-graph, emits the pre-rotation
+    outputs as a ``ChunkQueue`` and returns the rotated state; the final
+    chunk of a run is instantiated with ``rotate=False`` (frontier
+    trajectory matches the host-rotation semantics exactly).
+    """
     osend, orecv, ostep = (np.asarray(a) for a in
                            (nspec.orig_sender, nspec.orig_recv,
                             nspec.orig_step))
@@ -523,58 +610,80 @@ def _compiled_chunk(nspec: SimSpec, w_slots: int, chunk_len: int):
         dtype=jnp.int32)
     osend_p, orecv_p = pad(osend, 0), pad(orecv, 0)
     ostep_p = pad(np.minimum(ostep, _NEVER_STEP), _NEVER_STEP)
+    stakes_r32 = jnp.asarray(nspec.stakes_r, dtype=jnp.float32)
 
     def chunk(fail: FailArrays, state: SimState, t0):
-        sl = lambda a: jax.lax.dynamic_slice(a, (state.base,), (w_slots,))
+        base0 = state.base
+        sl = lambda a: jax.lax.dynamic_slice(a, (base0,), (w_slots,))
         sched_w = (sl(osend_p), sl(orecv_p), sl(ostep_p))
-        step = _protocol_step(nspec, fail, sched_w, state.base, w_slots)
+        step = _protocol_step(nspec, fail, sched_w, base0, w_slots)
         ts = t0 + jnp.arange(chunk_len, dtype=jnp.int32)
-        return jax.lax.scan(step, state, ts)
+        state, ms = jax.lax.scan(step, state, ts)
+        if not rotate:
+            queue = ChunkQueue(state.quack_time, state.deliver_time,
+                               state.retry, state.recv_has, base0,
+                               jnp.zeros((), dtype=jnp.int32))
+            return state, ms, queue
+        f = gc_frontier_device(
+            base=base0, t_next=t0 + chunk_len, m=nspec.m,
+            known=state.known, bcast_q=state.bcast_q,
+            recv_has=state.recv_has, ack_floor=state.ack_floor,
+            stakes_r=stakes_r32, quack_thresh=nspec.quack_thresh,
+            orig_step=sl(ostep_p), crash_r=fail.crash_r,
+            byz_ack_low=fail.byz_ack_low)
+        queue = ChunkQueue(state.quack_time, state.deliver_time,
+                           state.retry, state.recv_has, base0, f)
+        return _rotate_device(state, f, w_slots), ms, queue
 
-    return jax.jit(chunk)
+    return chunk
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_batch_chunk(nspec: SimSpec, w_slots: int, chunk_len: int,
+                          rotate: bool = True):
+    """Per-scenario failure masks AND window bases, one dispatch.
+
+    Single windowed runs go through the same program as a batch of one,
+    so there is exactly one chunk kernel to keep correct.
+    """
+    return jax.jit(jax.vmap(_build_chunk(nspec, w_slots, chunk_len, rotate),
+                            in_axes=(0, 0, None)))
 
 
 def _np_state(state: SimState) -> SimState:
     return jax.tree_util.tree_map(np.asarray, state)
 
 
-def _rotate(spec: SimSpec, s: SimState, base: int, t_next: int,
-            orig_step_pad: np.ndarray, outs) -> Tuple[SimState, int]:
-    """Advance the window past the GC frontier (host-side, numpy state)."""
-    w = spec.window_slots
-    f = gc_frontier(
-        base=base, t_next=t_next, m=spec.m,
-        known=s.known, bcast_q=s.bcast_q, recv_has=s.recv_has,
-        ack_floor=s.ack_floor, stakes_r=np.asarray(spec.stakes_r),
-        quack_thresh=spec.quack_thresh,
-        orig_step=orig_step_pad[base:base + w],
-        crash_r=np.asarray(spec.crash_r),
-        byz_ack_low=np.asarray(spec.byz_ack_low))
-    if f == 0:
-        return s, base
-    out_quack, out_deliver, out_retry, out_recv = outs
-    out_quack[:, base:base + f] = s.quack_time[:, :f]
-    out_deliver[base:base + f] = s.deliver_time[:f]
-    out_retry[:, base:base + f] = s.retry[:, :f]
-    out_recv[:, base:base + f] = s.recv_has[:, :f]
+def _grow_state(state: SimState, new_w: int) -> SimState:
+    """Migrate scan state to a wider window (adaptive growth), on device.
 
-    def shift(a, fill):
-        tail = np.full(a.shape[:-1] + (f,), fill, dtype=a.dtype)
-        return np.concatenate([a[..., f:], tail], axis=-1)
+    Window-indexed arrays gain fresh-fill tail slots; per-replica state,
+    ``base`` and leading (batch) axes are untouched, so the migrated state
+    resumes the identical protocol at the wider width.
+    """
+    w = state.deliver_time.shape[-1]
 
-    rotated = SimState(
-        recv_has=shift(s.recv_has, False), bcast_q=shift(s.bcast_q, False),
-        bcast_done=shift(s.bcast_done, False), known=shift(s.known, False),
-        complaint=shift(s.complaint, False),
-        repeat_c=shift(s.repeat_c, False),
-        last_cum=s.last_cum, retry=shift(s.retry, 0),
-        quack_time=shift(s.quack_time, -1),
-        deliver_time=shift(s.deliver_time, -1),
-        hq_reports=s.hq_reports, ack_floor=s.ack_floor,
-        base=np.int32(base + f),
-        retired_delivered=np.int32(int(s.retired_delivered)
-                                   + int((s.deliver_time[:f] >= 0).sum())))
-    return rotated, base + f
+    def pad(a, fill):
+        a = jnp.asarray(a)
+        ext = jnp.full(a.shape[:-1] + (new_w - w,), fill, dtype=a.dtype)
+        return jnp.concatenate([a, ext], axis=-1)
+
+    return state._replace(
+        **{name: pad(getattr(state, name), fill)
+           for name, fill in _WINDOW_FILLS.items()})
+
+
+def _widen_on_overflow(spec: SimSpec, w: int, base: int, need: int,
+                       t: int) -> Optional[int]:
+    """Overflow policy: raise (strict), grow 2x, or None => dense fallback."""
+    if not spec.adaptive_window:
+        raise ValueError(
+            f"sliding window overflow: round {t} dispatches message "
+            f"{need} but the window covers [{base}, {base + w}) — the GC "
+            f"frontier is {base}. Increase SimConfig.window_slots (or use "
+            f"window_slots='auto'), or leave adaptive_window=True for "
+            f"automatic growth / dense fallback.")
+    return grow_window(w, base, need, spec.m)
 
 
 def _max_msg_by_round(spec: SimSpec) -> np.ndarray:
@@ -587,66 +696,8 @@ def _max_msg_by_round(spec: SimSpec) -> np.ndarray:
 
 
 def _run_windowed(spec: SimSpec) -> SimResult:
-    nspec = _neutral(spec)
-    # chunk programs are independent of the horizon: share them across runs
-    # that differ only in `steps` (e.g. growing-stream sweeps).
-    cspec = dataclasses.replace(nspec, steps=0)
-    fail = _fail_arrays(spec)
-    w, c_full = spec.window_slots, max(spec.chunk_steps, 1)
-    n_s, n_r, m = spec.n_s, spec.n_r, spec.m
-
-    out_quack = np.full((n_s, m), -1, dtype=np.int32)
-    out_deliver = np.full((m,), -1, dtype=np.int32)
-    out_retry = np.zeros((n_s, m), dtype=np.int32)
-    out_recv = np.zeros((n_r, m), dtype=bool)
-    outs = (out_quack, out_deliver, out_retry, out_recv)
-
-    orig_step_pad = np.concatenate(
-        [np.asarray(spec.orig_step, dtype=np.int64),
-         np.full(w, _NEVER_STEP, dtype=np.int64)])
-    dispatched_by = _max_msg_by_round(spec)
-
-    state = _init_state(nspec, w)
-    base, t = 0, 0
-    bases = [0]
-    metric_parts = []
-    while t < spec.steps:
-        c = min(c_full, spec.steps - t)
-        need = int(dispatched_by[t + c - 1])
-        if need >= base + w:
-            raise ValueError(
-                f"sliding window overflow: round {t + c - 1} dispatches "
-                f"message {need} but the window covers [{base}, {base + w})"
-                f" — the GC frontier is {base} after {t} rounds. Increase "
-                f"SimConfig.window_slots (or use window_slots='auto'), or "
-                f"fall back to the dense path for this scenario.")
-        state, ms = _compiled_chunk(cspec, w, c)(fail, state, jnp.int32(t))
-        metric_parts.append(jax.tree_util.tree_map(np.asarray, ms))
-        t += c
-        if t < spec.steps:
-            host, new_base = _rotate(spec, _np_state(state), base, t,
-                                     orig_step_pad, outs)
-            if new_base != base:
-                state = jax.tree_util.tree_map(jnp.asarray, host)
-                base = new_base
-            bases.append(base)
-
-    # flush the live window into the output buffers
-    s = _np_state(state)
-    live = min(w, m - base)
-    if live > 0:
-        out_quack[:, base:base + live] = s.quack_time[:, :live]
-        out_deliver[base:base + live] = s.deliver_time[:live]
-        out_retry[:, base:base + live] = s.retry[:, :live]
-        out_recv[:, base:base + live] = s.recv_has[:, :live]
-
-    metrics = StepMetrics(*(
-        np.concatenate([getattr(p, name) for p in metric_parts])
-        for name in StepMetrics._fields))
-    return SimResult(
-        spec=spec, metrics=metrics, quack_time=out_quack,
-        deliver_time=out_deliver, retry=out_retry, recv_has=out_recv,
-        gc_frontiers=np.asarray(bases, dtype=np.int64))
+    """Single windowed run == a batch of one (same kernel, same drains)."""
+    return _run_windowed_batch([spec])[0]
 
 
 def run_simulation(spec: SimSpec) -> SimResult:
@@ -663,32 +714,20 @@ def run_simulation(spec: SimSpec) -> SimResult:
         deliver_time=final.deliver_time,
         retry=final.retry,
         recv_has=final.recv_has,
+        gc_frontiers=np.zeros(1, dtype=np.int64),
+        final_window_slots=spec.m,
     )
 
 
-def run_simulation_batch(specs: Sequence[SimSpec]) -> List[SimResult]:
-    """Run many failure scenarios of one shape in a single compilation.
-
-    All specs must share every non-failure field (same RSMs, schedules and
-    thresholds — e.g. from ``build_spec`` with different ``FailureScenario``
-    masks); the failure masks are stacked and the dense runner is
-    ``jax.vmap``-ed over them, so a whole sweep costs one compile + one
-    device dispatch instead of one ``lru_cache`` entry per scenario.
-    Windowed specs are executed with the dense kernel (results identical).
-    """
-    specs = list(specs)
-    if not specs:
-        return []
-    nspec = _neutral(specs[0])
-    for s in specs[1:]:
-        if _neutral(s) != nspec:
-            raise ValueError("run_simulation_batch: specs differ outside "
-                             "their failure masks; batch members must share "
-                             "shapes, schedules and thresholds")
+def _stacked_fails(specs: Sequence[SimSpec]) -> FailArrays:
     fails = [_fail_arrays(s) for s in specs]
-    stacked = FailArrays(*(jnp.stack([getattr(f, name) for f in fails])
-                           for name in FailArrays._fields))
-    finals, ms = _compiled_batch(nspec)(stacked)
+    return FailArrays(*(jnp.stack([getattr(f, name) for f in fails])
+                        for name in FailArrays._fields))
+
+
+def _run_dense_batch(specs: List[SimSpec]) -> List[SimResult]:
+    nspec = _neutral(specs[0])
+    finals, ms = _compiled_batch(nspec)(_stacked_fails(specs))
     finals = _np_state(finals)
     ms = jax.tree_util.tree_map(np.asarray, ms)
     out = []
@@ -700,5 +739,139 @@ def run_simulation_batch(specs: Sequence[SimSpec]) -> List[SimResult]:
             deliver_time=finals.deliver_time[b],
             retry=finals.retry[b],
             recv_has=finals.recv_has[b],
+            gc_frontiers=np.zeros(1, dtype=np.int64),
+            final_window_slots=spec.m,
         ))
     return out
+
+
+def _run_windowed_batch(specs: List[SimSpec]) -> List[SimResult]:
+    """Batched windowed sweep: per-scenario failure masks AND window bases.
+
+    The vmapped chunk rotates each scenario's ring buffers at its own GC
+    frontier in-graph, so the whole sweep is one compilation and one
+    device dispatch per chunk with O(B * W) state — windowed and batched
+    at once. Window overflow (any scenario) grows W for the whole batch;
+    dense fallback reruns the entire sweep on the dense batch kernel.
+    """
+    spec0 = specs[0]
+    n_b = len(specs)
+    nspec = _neutral(spec0)
+    cspec = dataclasses.replace(nspec, steps=0)
+    fails = _stacked_fails(specs)
+    w, c_full = spec0.window_slots, max(spec0.chunk_steps, 1)
+    n_s, n_r, m = spec0.n_s, spec0.n_r, spec0.m
+
+    out_quack = np.full((n_b, n_s, m), -1, dtype=np.int32)
+    out_deliver = np.full((n_b, m), -1, dtype=np.int32)
+    out_retry = np.zeros((n_b, n_s, m), dtype=np.int32)
+    out_recv = np.zeros((n_b, n_r, m), dtype=bool)
+
+    dispatched_by = _max_msg_by_round(spec0)
+
+    state = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_b,) + x.shape),
+        _init_state(nspec, w))
+    bases = np.zeros(n_b, dtype=np.int64)
+    bases_hist = [bases.copy()]
+    t = 0
+    metric_parts = []
+    while t < spec0.steps:
+        c = min(c_full, spec0.steps - t)
+        need = int(dispatched_by[t + c - 1])
+        if need >= int(bases.min()) + w:
+            new_w = _widen_on_overflow(spec0, w, int(bases.min()), need,
+                                       t + c - 1)
+            if new_w is None:
+                dense = run_simulation_batch(
+                    [dataclasses.replace(s, window_slots=0, chunk_steps=0)
+                     for s in specs])
+                return [dataclasses.replace(r, spec=s)
+                        for r, s in zip(dense, specs)]
+            state = _grow_state(state, new_w)
+            w = new_w
+        last = t + c >= spec0.steps
+        state, ms, queue = _compiled_batch_chunk(cspec, w, c, not last)(
+            fails, state, jnp.int32(t))
+        metric_parts.append(jax.tree_util.tree_map(np.asarray, ms))
+        t += c
+        if not last:
+            counts = np.asarray(queue.count)
+            # the host's base mirror must track the in-graph rotation
+            # exactly — retired columns land at absolute slots [base, base+f)
+            if not (np.asarray(queue.base) == bases).all():
+                raise RuntimeError(
+                    "window base mirror diverged from device rotation")
+            if counts.any():
+                qq = np.asarray(queue.quack_time)
+                qd = np.asarray(queue.deliver_time)
+                qr = np.asarray(queue.retry)
+                qh = np.asarray(queue.recv_has)
+                for b in range(n_b):
+                    f = int(counts[b])
+                    if f:
+                        lo = int(bases[b])
+                        out_quack[b, :, lo:lo + f] = qq[b, :, :f]
+                        out_deliver[b, lo:lo + f] = qd[b, :f]
+                        out_retry[b, :, lo:lo + f] = qr[b, :, :f]
+                        out_recv[b, :, lo:lo + f] = qh[b, :, :f]
+                        bases[b] = lo + f
+            bases_hist.append(bases.copy())
+
+    final = _np_state(state)
+    for b in range(n_b):
+        lo = int(bases[b])
+        live = min(w, m - lo)
+        if live > 0:
+            out_quack[b, :, lo:lo + live] = final.quack_time[b, :, :live]
+            out_deliver[b, lo:lo + live] = final.deliver_time[b, :live]
+            out_retry[b, :, lo:lo + live] = final.retry[b, :, :live]
+            out_recv[b, :, lo:lo + live] = final.recv_has[b, :, :live]
+
+    traj = np.stack(bases_hist)                     # (n_boundaries, n_b)
+    out = []
+    for b, spec in enumerate(specs):
+        metrics = StepMetrics(*(
+            np.concatenate([getattr(p, name)[b] for p in metric_parts])
+            for name in StepMetrics._fields))
+        out.append(SimResult(
+            spec=spec, metrics=metrics,
+            quack_time=out_quack[b], deliver_time=out_deliver[b],
+            retry=out_retry[b], recv_has=out_recv[b],
+            gc_frontiers=traj[:, b].astype(np.int64),
+            final_window_slots=w,
+        ))
+    return out
+
+
+def run_simulation_batch(specs: Sequence[SimSpec]) -> List[SimResult]:
+    """Run many failure scenarios of one shape in a single compilation.
+
+    All specs must share every non-failure field (same RSMs, schedules,
+    thresholds and window config — e.g. from ``build_spec`` with different
+    ``FailureScenario`` masks); the failure masks are stacked and the
+    runner ``jax.vmap``-ed over them, so a whole sweep costs one compile +
+    one device dispatch (per chunk, when windowed) instead of one
+    ``lru_cache`` entry per scenario. Windowed specs run on the windowed
+    kernel with per-scenario window bases (``_run_windowed_batch``) —
+    O(B * W) device state instead of O(B * M) — and are bit-identical to
+    per-scenario runs.
+    """
+    specs = list(specs)
+    if not specs:
+        return []
+    nspec = _neutral(specs[0])
+    win_key = (specs[0].window_slots, specs[0].chunk_steps,
+               specs[0].adaptive_window)
+    for s in specs[1:]:
+        if (_neutral(s) != nspec
+                or (s.window_slots, s.chunk_steps, s.adaptive_window)
+                != win_key):
+            raise ValueError("run_simulation_batch: specs differ outside "
+                             "their failure masks; batch members must share "
+                             "shapes, schedules, thresholds and window "
+                             "config (window_slots / chunk_steps / "
+                             "adaptive_window)")
+    if specs[0].window_slots:
+        return _run_windowed_batch(specs)
+    return _run_dense_batch(specs)

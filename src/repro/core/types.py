@@ -204,9 +204,22 @@ class SimConfig:
                      sequence numbers above the GC frontier (§4.3) instead
                      of all M. None => dense (full-M) state; "auto" =>
                      sized from n, window, phi and chunk_steps
-                     (``gc.default_window_slots``); an int fixes W.
+                     (``gc.default_window_slots``), falling back to the
+                     dense path when the computed W would not be smaller
+                     than M (windowing would buy nothing); an int fixes W.
+                     Rotation past the GC frontier happens *on device*
+                     (in-graph ``lax.dynamic_slice`` ring shift at each
+                     chunk boundary) — the host only drains a bounded
+                     O(W) output queue per chunk, never the scan state.
     chunk_steps:     rounds per compiled scan chunk in windowed mode; the
-                     window rotates (GC frontier advances) between chunks.
+                     window rotates (GC frontier advances in-graph) at
+                     chunk boundaries.
+    adaptive_window: overflow semantics when a stalled GC frontier pins
+                     the window while originals keep dispatching. True
+                     (default): grow W adaptively (2x, migrating the scan
+                     state) and fall back to the dense kernel when W would
+                     reach M. False: raise ``ValueError`` (the strict
+                     pre-growth behaviour, useful for sizing tests).
     """
 
     n_msgs: int = 256
@@ -218,6 +231,7 @@ class SimConfig:
     seed: int = 0
     window_slots: Optional[object] = None     # None | "auto" | int
     chunk_steps: int = 32
+    adaptive_window: bool = True
 
     def __post_init__(self):
         ws = self.window_slots

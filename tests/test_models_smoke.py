@@ -17,6 +17,8 @@ from repro.optim import AdamWConfig, adamw_init, adamw_update
 ARCHS = list_configs()
 RNG = jax.random.PRNGKey(0)
 
+pytestmark = pytest.mark.slow     # per-arch sweeps; full CI tier only
+
 
 def _batch(cfg, b, s):
     batch = {"tokens": jax.random.randint(RNG, (b, s), 0, cfg.vocab)}

@@ -9,6 +9,13 @@ model: <= u failures of any kind, <= r of them byzantine) must preserve:
   >= u_r+1 stake have claimed the prefix (so >= 1 honest holder exists);
 * Lemma 1 — no message needs more than u_s + u_r + 1 retransmissions;
 * GC safety — the quacked prefix at any honest sender only grows.
+
+The strategy includes GC-stalling adversaries (the §4.3 partial-broadcast
+attack), so the windowed ≡ dense property below covers frontier-pinning
+scenarios. This module needs hypothesis (CI installs it and asserts it is
+importable); a hypothesis-free seeded twin of the windowed ≡ dense
+property lives in ``tests/test_windowed.py`` so the invariant executes
+even where hypothesis is unavailable.
 """
 
 import dataclasses
@@ -30,24 +37,32 @@ def rsm_pair_with_failures(draw):
     f_r = draw(st.integers(0, 1))
     sender = RSMConfig.bft(max(f_s, 1))
     receiver = RSMConfig.bft(max(f_r, 1))
-    # place at most u failures per side, at most r byzantine
+    # place at most u failures per side, at most r byzantine; GC-stalling
+    # kinds (the §4.3 partial-broadcast attack) included so the windowed
+    # properties below cover frontier-pinning adversaries.
     crash_s = [-1] * sender.n
     byz_recv = [False] * receiver.n
+    byz_partial = [False] * receiver.n
     crash_r = [-1] * receiver.n
     n_fail_s = draw(st.integers(0, sender.u))
     n_fail_r = draw(st.integers(0, receiver.u))
     for i in draw(st.permutations(range(sender.n)))[:n_fail_s]:
         crash_s[i] = draw(st.integers(0, 8))
-    kinds = draw(st.lists(st.sampled_from(["crash", "byz_drop"]),
-                          min_size=n_fail_r, max_size=n_fail_r))
+    kinds = draw(st.lists(
+        st.sampled_from(["crash", "byz_drop", "bcast_partial"]),
+        min_size=n_fail_r, max_size=n_fail_r))
     targets = draw(st.permutations(range(receiver.n)))[:n_fail_r]
     for i, kind in zip(targets, kinds):
         if kind == "crash":
             crash_r[i] = draw(st.integers(0, 8))
+        elif kind == "bcast_partial":
+            byz_partial[i] = True
         else:
             byz_recv[i] = True
     fails = FailureScenario(crash_s=tuple(crash_s), crash_r=tuple(crash_r),
-                            byz_recv_drop=tuple(byz_recv))
+                            byz_recv_drop=tuple(byz_recv),
+                            byz_bcast_partial=tuple(byz_partial),
+                            bcast_limit=draw(st.integers(1, 2)))
     return sender, receiver, fails
 
 

@@ -46,6 +46,7 @@ print('RULES-OK')
     assert "RULES-OK" in out
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", [
     ("granite-8b", "train_4k"),
     ("deepseek-moe-16b", "decode_32k"),

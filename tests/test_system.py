@@ -6,6 +6,8 @@ import pytest
 
 from helpers import run_py
 
+pytestmark = pytest.mark.slow     # end-to-end runs; full CI tier only
+
 
 def test_training_loss_decreases():
     out = run_py("""

@@ -1,10 +1,13 @@
 """Sliding-window simulator core: dense-vs-windowed equivalence.
 
 Every fixture from the dense test suite runs three ways — dense jax,
-windowed jax (ring buffers + chunked scans + GC-frontier rotation), and
-the numpy oracle mirroring the window — and all per-message outputs,
+windowed jax (device-resident ring buffers: in-graph GC frontier +
+``lax.dynamic_slice`` rotation, bounded per-chunk output queue), and the
+numpy oracle mirroring the window — and all per-message outputs,
 per-round metric streams, and the GC-frontier trajectory itself must
-agree bit-for-bit.
+agree bit-for-bit. Batched windowed sweeps (per-scenario traced window
+bases under ``jax.vmap``), adaptive window growth under GC-stalling
+adversaries, and the automatic dense fallback are covered the same way.
 """
 
 import dataclasses
@@ -15,8 +18,10 @@ import pytest
 from repro.core import FailureScenario, RSMConfig, SimConfig
 from repro.core.quack import claim_bitmask, missing_below_horizon
 from repro.core.refsim import run_reference
-from repro.core.simulator import (build_spec, run_simulation,
-                                  run_simulation_batch)
+from repro.core.simulator import (_compiled_batch_chunk, _compiled_sim,
+                                  _fail_arrays, _init_state, _neutral,
+                                  _stacked_fails, build_spec,
+                                  run_simulation, run_simulation_batch)
 
 BFT1 = RSMConfig.bft(1)          # n=4, u=r=1
 CFT1 = RSMConfig.cft(1)          # n=3, u=1, r=0
@@ -133,13 +138,69 @@ def test_rotation_actually_happens():
     assert (jw.deliver_time >= 0).all()
 
 
-def test_window_overflow_raises():
-    """A window too small for the in-flight set fails loudly, not wrongly."""
+def test_window_overflow_raises_in_strict_mode():
+    """With adaptive growth disabled, a window too small for the in-flight
+    set fails loudly, not wrongly."""
     spec = build_spec(BFT1, BFT1,
                       SimConfig(n_msgs=64, steps=40, window=4, phi=6,
-                                window_slots=8, chunk_steps=4))
+                                window_slots=8, chunk_steps=4,
+                                adaptive_window=False))
     with pytest.raises(ValueError, match="window overflow"):
         run_simulation(spec)
+
+
+# the §4.3 GC-stall attack: a partial broadcaster pins the frontier while
+# originals keep dispatching, so an undersized window must grow.
+GC_STALL = FailureScenario(byz_bcast_partial=(True, False, False, False),
+                           bcast_limit=2)
+
+
+@pytest.mark.parametrize("name,simkw,fails", [
+    ("failure_free_lag",
+     dict(n_msgs=128, steps=128 // 4 + 80, window=1, phi=6,
+          window_slots=16, chunk_steps=8),
+     FailureScenario.none()),
+    ("gc_stall_adversary",
+     dict(n_msgs=128, steps=128 // 4 + 80, window=1, phi=6,
+          window_slots=16, chunk_steps=8),
+     GC_STALL),
+], ids=["failure_free_lag", "gc_stall_adversary"])
+def test_adaptive_window_growth(name, simkw, fails):
+    """Overflow grows the window (2x, state migrated on device) instead of
+    raising; the grown run stays windowed and bit-identical to dense."""
+    spec = build_spec(BFT1, BFT1, SimConfig(**simkw), fails)
+    rw = run_simulation(spec)
+    rd = run_simulation(_dense(spec))
+    for out in OUTPUTS:
+        assert np.array_equal(getattr(rw, out), getattr(rd, out)), out
+    assert rw.final_window_slots > spec.window_slots      # actually grew
+    assert rw.final_window_slots < spec.m                 # still windowed
+    assert rw.gc_frontiers.max() > 0                      # and rotated
+    assert (rw.deliver_time >= 0).all()
+    # the numpy oracle mirrors the same growth decisions, so the frontier
+    # trajectories still agree bit-for-bit.
+    rr = run_reference(spec)
+    assert np.array_equal(rw.gc_frontiers, rr.gc_frontiers)
+
+
+def test_adaptive_window_dense_fallback():
+    """When a stalled frontier would force W to reach M, the run falls
+    back to the dense kernel automatically and reports the trivial
+    frontier trajectory."""
+    fails = FailureScenario(byz_bcast_partial=(True, False, False, False),
+                            bcast_limit=2, crash_r=(-1, 8, -1, -1))
+    spec = build_spec(BFT1, BFT1,
+                      SimConfig(n_msgs=64, steps=200, window=1, phi=6,
+                                window_slots=16, chunk_steps=8), fails)
+    rw = run_simulation(spec)
+    rd = run_simulation(_dense(spec))
+    for out in OUTPUTS:
+        assert np.array_equal(getattr(rw, out), getattr(rd, out)), out
+    assert rw.final_window_slots == spec.m
+    assert np.array_equal(rw.gc_frontiers, np.zeros(1, dtype=np.int64))
+    assert rw.spec is spec                         # result keeps the spec
+    rr = run_reference(spec)                       # oracle mirrors fallback
+    assert np.array_equal(rr.gc_frontiers, np.zeros(1, dtype=np.int64))
 
 
 def test_long_stream_constant_state():
@@ -181,6 +242,189 @@ def test_batch_matches_sequential():
         for mname in METRICS:
             assert np.array_equal(getattr(br.metrics, mname),
                                   getattr(sr.metrics, mname)), mname
+
+
+BATCH_SCENARIOS = [
+    FailureScenario.none(),
+    FailureScenario(crash_s=(1, -1, -1, -1)),
+    FailureScenario(byz_recv_drop=(True, False, False, False),
+                    byz_ack_low=(False, True, False, False)),
+    FailureScenario(byz_bcast_partial=(True, False, False, False),
+                    bcast_limit=2, crash_r=(-1, 8, -1, -1)),
+    FailureScenario.crash_fraction(4, 4, 0.33, seed=1),
+]
+
+
+def test_batch_windowed_matches_sequential_and_dense():
+    """Windowed specs batch with per-scenario window bases: one vmapped
+    chunk stream, bit-identical to per-scenario windowed AND dense runs
+    (outputs, metric streams, and each scenario's frontier trajectory)."""
+    sim = SimConfig(n_msgs=24, steps=150, window=1, phi=6,
+                    window_slots=24, chunk_steps=8)
+    specs = [build_spec(BFT1, BFT1, sim, f) for f in BATCH_SCENARIOS]
+    assert all(s.window_slots > 0 for s in specs)
+    batched = run_simulation_batch(specs)
+    rotated = 0
+    for spec, br in zip(specs, batched):
+        sw = run_simulation(spec)
+        sd = run_simulation(_dense(spec))
+        for out in OUTPUTS:
+            assert np.array_equal(getattr(br, out), getattr(sw, out)), out
+            assert np.array_equal(getattr(br, out), getattr(sd, out)), out
+        for mname in METRICS:
+            assert np.array_equal(getattr(br.metrics, mname),
+                                  getattr(sw.metrics, mname)), mname
+        assert np.array_equal(br.gc_frontiers, sw.gc_frontiers)
+        assert br.final_window_slots == sw.final_window_slots
+        rotated += int(br.gc_frontiers.max() > 0)
+    # the batch genuinely ran windowed: most scenarios rotated, and the
+    # per-scenario trajectories diverge (bases are truly per-scenario).
+    assert rotated >= 3
+    trajs = {tuple(br.gc_frontiers) for br in batched}
+    assert len(trajs) > 1
+
+
+def test_batch_windowed_rotation_smaller_window():
+    """A genuinely sliding batch (W < M) with staggered crash scenarios."""
+    sim = SimConfig(n_msgs=24, steps=60, window=1, phi=6,
+                    window_slots=16, chunk_steps=4)
+    scenarios = [FailureScenario.none(),
+                 FailureScenario(crash_r=(-1, -1, -1, 40)),
+                 FailureScenario(crash_s=(-1, -1, 45, -1))]
+    specs = [build_spec(BFT1, BFT1, sim, f) for f in scenarios]
+    batched = run_simulation_batch(specs)
+    for spec, br in zip(specs, batched):
+        sw = run_simulation(spec)
+        for out in OUTPUTS:
+            assert np.array_equal(getattr(br, out), getattr(sw, out)), out
+        assert np.array_equal(br.gc_frontiers, sw.gc_frontiers)
+        assert br.gc_frontiers.max() > 0
+
+
+def test_batch_windowed_adaptive_growth():
+    """Batched adaptive growth: a stalling scenario overflows the shared
+    window, the whole batched state migrates to 2x W on device, and every
+    scenario still matches its own dense run bit-for-bit."""
+    sim = SimConfig(n_msgs=128, steps=128 // 4 + 80, window=1, phi=6,
+                    window_slots=16, chunk_steps=8)
+    scenarios = [FailureScenario.none(), GC_STALL]
+    specs = [build_spec(BFT1, BFT1, sim, f) for f in scenarios]
+    batched = run_simulation_batch(specs)
+    for spec, br in zip(specs, batched):
+        sd = run_simulation(_dense(spec))
+        for out in OUTPUTS:
+            assert np.array_equal(getattr(br, out), getattr(sd, out)), out
+        assert br.final_window_slots > spec.window_slots   # grew
+        assert br.final_window_slots < spec.m              # still windowed
+        assert br.gc_frontiers.max() > 0                   # and rotated
+    # the stalled scenario's frontier genuinely lags the clean one
+    assert not np.array_equal(batched[0].gc_frontiers,
+                              batched[1].gc_frontiers)
+
+
+def test_result_field_parity_across_paths():
+    """Dense, windowed and batched results populate the same SimResult
+    fields: gc_frontiers is never None (dense = trivial [0] trajectory)
+    and final_window_slots reports the width the run ended with."""
+    sim_w = SimConfig(n_msgs=24, steps=30, window=1, phi=6,
+                      window_slots=16, chunk_steps=4)
+    sim_d = SimConfig(n_msgs=24, steps=30, window=1, phi=6)
+    spec_w = build_spec(BFT1, BFT1, sim_w)
+    spec_d = build_spec(BFT1, BFT1, sim_d)
+    rw = run_simulation(spec_w)
+    rd = run_simulation(spec_d)
+    batch = run_simulation_batch([spec_d, spec_d])
+    batch_w = run_simulation_batch([spec_w, spec_w])
+    for r in [rw, rd, *batch, *batch_w]:
+        assert r.gc_frontiers is not None
+        assert r.gc_frontiers.dtype == np.int64
+        assert r.final_window_slots is not None
+        assert (np.diff(r.gc_frontiers) >= 0).all()
+    assert np.array_equal(rd.gc_frontiers, np.zeros(1, dtype=np.int64))
+    assert rd.final_window_slots == spec_d.m
+    assert rw.final_window_slots == spec_w.window_slots
+    for r in batch:
+        assert np.array_equal(r.gc_frontiers, np.zeros(1, dtype=np.int64))
+    for r in batch_w:
+        assert r.gc_frontiers.max() > 0
+
+
+def test_scan_state_nbytes_matches_carried_state():
+    """``SimSpec.scan_state_nbytes`` equals the bytes of the state the
+    compiled runners actually carry (derived via ``jax.eval_shape``, so
+    it cannot drift from the implementation)."""
+    import jax
+    import jax.numpy as jnp
+
+    def nbytes(tree):
+        return sum(np.asarray(leaf).nbytes
+                   for leaf in jax.tree_util.tree_leaves(tree))
+
+    spec_w = build_spec(BFT1, BFT1,
+                        SimConfig(n_msgs=24, steps=30, window=1, phi=6,
+                                  window_slots=16, chunk_steps=4))
+    nspec = _neutral(spec_w)
+    cspec = dataclasses.replace(nspec, steps=0)
+    state1 = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (1,) + x.shape),
+        _init_state(nspec, spec_w.window_slots))
+    state, _, _ = _compiled_batch_chunk(cspec, spec_w.window_slots, 4, True)(
+        _stacked_fails([spec_w]), state1, np.int32(0))
+    assert nbytes(state) == spec_w.scan_state_nbytes()   # batch of 1
+
+    spec_d = build_spec(BFT1, BFT1, SimConfig(n_msgs=24, steps=30,
+                                              window=1, phi=6))
+    final, _ = _compiled_sim(_neutral(spec_d))(_fail_arrays(spec_d))
+    assert nbytes(final) == spec_d.scan_state_nbytes()
+
+
+def _random_scenario(rng, n_s, n_r):
+    """Random UpRight-model failure placement, GC-stalling kinds included."""
+    crash_s = [-1] * n_s
+    crash_r = [-1] * n_r
+    byz_recv = [False] * n_r
+    byz_low = [False] * n_r
+    byz_partial = [False] * n_r
+    if rng.rand() < 0.7:
+        crash_s[rng.randint(n_s)] = int(rng.randint(0, 10))
+    kind = rng.choice(["none", "crash", "byz_drop", "ack_low",
+                       "bcast_partial"])
+    j = rng.randint(n_r)
+    if kind == "crash":
+        crash_r[j] = int(rng.randint(0, 10))
+    elif kind == "byz_drop":
+        byz_recv[j] = True
+    elif kind == "ack_low":
+        byz_low[j] = True
+    elif kind == "bcast_partial":
+        byz_partial[j] = True
+    return FailureScenario(
+        crash_s=tuple(crash_s), crash_r=tuple(crash_r),
+        byz_recv_drop=tuple(byz_recv), byz_ack_low=tuple(byz_low),
+        byz_bcast_partial=tuple(byz_partial),
+        bcast_limit=int(rng.randint(1, 3)))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_property_windowed_equals_dense(seed):
+    """Property: windowed ≡ dense (bit-identical quack/deliver/retry) over
+    randomly generated failure scenarios including GC-stalling ones.
+
+    Deliberately hypothesis-free so it always executes (CI and local)
+    instead of ``importorskip``-skipping; ``test_protocol_properties``
+    layers the hypothesis-driven version on top where available.
+    """
+    rng = np.random.RandomState(seed)
+    fails = _random_scenario(rng, 4, 4)
+    sim = SimConfig(n_msgs=12, steps=160, window=1, phi=6,
+                    window_slots=12, chunk_steps=int(rng.choice([4, 8, 16])))
+    spec = build_spec(BFT1, BFT1, sim, fails)
+    rw = run_simulation(spec)
+    rd = run_simulation(_dense(spec))
+    for out in ("quack_time", "deliver_time", "retry"):
+        assert np.array_equal(getattr(rw, out), getattr(rd, out)), (out,
+                                                                    fails)
+    assert (np.diff(rw.gc_frontiers) >= 0).all()
 
 
 def test_batch_rejects_mismatched_shapes():
