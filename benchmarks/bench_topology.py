@@ -1,0 +1,171 @@
+"""Multi-link C3B topology sweeps on the batched windowed kernel.
+
+Sweeps link count x stream length x failure scenario over fanout
+topologies (primary -> N backups, the disaster-recovery shape): every
+link is one lane of a single vmapped windowed chunk stream, so the
+device state is O(L * W) and a whole graph costs one compilation and one
+dispatch per chunk. A second section times a chained relay pipeline
+(commit-floor plumbing between chunks) and reports the end-to-end
+delivery lag the chaining introduces.
+
+  PYTHONPATH=src python -m benchmarks.bench_topology
+      [--links 2,4,8] [--sizes 2048,8192] [--scenarios none,crash25,byz]
+      [--json BENCH_topology.json]
+
+The CI fast tier runs the acceptance smoke — a 4-link x 8192-message
+sweep — via ``--links 4 --sizes 8192``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.run import _dump_json
+from repro.core import FailureScenario, RSMConfig, SimConfig
+from repro.topology import Topology, link_specs, run_topology
+
+LINKS = (2, 4, 8)
+SIZES = (2048, 8192)
+SCENARIOS = ("none", "crash25", "byz")
+CFG = RSMConfig.bft(1)
+SEND_WINDOW = 4
+
+
+def _sim(m: int) -> SimConfig:
+    steps = m // (CFG.n * SEND_WINDOW) + 60
+    return SimConfig(n_msgs=m, steps=steps, window=SEND_WINDOW, phi=32,
+                     window_slots="auto", chunk_steps=32)
+
+
+def _scenario_failures(scenario: str, n_links: int, n: int) -> dict:
+    """Per-backup link failures for one sweep point."""
+    if scenario == "none":
+        return {}
+    if scenario == "crash25":
+        # staggered receiver crashes: every other backup loses 25% of its
+        # replicas mid-run, so the per-link GC frontiers genuinely diverge
+        # inside the one dispatch.
+        return {f"b{i}": FailureScenario.crash_fraction(
+                    n, n, 0.25, seed=i, at_step=8)
+                for i in range(0, n_links, 2)}
+    if scenario == "byz":
+        byz = (True,) + (False,) * (n - 1)
+        return {f"b{i}": FailureScenario(byz_recv_drop=byz)
+                for i in range(0, n_links, 2)}
+    raise ValueError(f"unknown scenario {scenario!r}")
+
+
+def _fanout(n_links: int, m: int, scenario: str) -> Topology:
+    return Topology.fanout(
+        "p", [f"b{i}" for i in range(n_links)], CFG, _sim(m),
+        failures=_scenario_failures(scenario, n_links, CFG.n))
+
+
+def rows(links=LINKS, sizes=SIZES, scenarios=SCENARIOS):
+    out = []
+    for m in sizes:
+        for n_links in links:
+            for scenario in scenarios:
+                topo = _fanout(n_links, m, scenario)
+                spec = link_specs(topo)[0]
+                t0 = time.time()
+                res = run_topology(topo)
+                cold = time.time() - t0
+                t0 = time.time()
+                res = run_topology(topo)
+                warm = time.time() - t0
+                # crashed/byzantine receivers can legitimately strand
+                # messages; completeness is judged on the clean links.
+                clean = [l.name for l in topo.links
+                         if l.name.split("->")[1] not in
+                         _scenario_failures(scenario, n_links, CFG.n)]
+                ok = all(res[n].delivered_prefix() == m for n in clean)
+                out.append({
+                    "section": "fanout",
+                    "links": n_links,
+                    "n_msgs": m,
+                    "scenario": scenario,
+                    "window_slots": res[topo.link_names[0]]
+                    .result.final_window_slots,
+                    "state_bytes_per_link": spec.scan_state_nbytes(),
+                    "cold_s": cold,
+                    "warm_s": warm,
+                    "complete": bool(ok),
+                })
+    return out
+
+
+def chain_rows(depth: int = 3, m: int = 2048):
+    """Chained relay pipeline: delivery lag of commit-floor plumbing."""
+    topo = Topology.chain([f"c{i}" for i in range(depth)], CFG, _sim(m))
+    t0 = time.time()
+    res = run_topology(topo)
+    cold = time.time() - t0
+    t0 = time.time()
+    res = run_topology(topo)
+    warm = time.time() - t0
+    first, last = topo.link_names[0], topo.link_names[-1]
+    d_first = int(np.asarray(res[first].result.deliver_time).max())
+    d_last = int(np.asarray(res[last].result.deliver_time).max())
+    return {
+        "section": "chain",
+        "links": depth - 1,
+        "n_msgs": m,
+        "scenario": "chained",
+        "complete": bool(res[last].delivered_prefix() == m),
+        "cold_s": cold,
+        "warm_s": warm,
+        "first_hop_done_round": d_first,
+        "last_hop_done_round": d_last,
+        "pipeline_lag_rounds": d_last - d_first,
+    }
+
+
+def main(links=LINKS, sizes=SIZES, scenarios=SCENARIOS, chain_depth=3,
+         json_path=None):
+    rs = rows(links, sizes, scenarios)
+    print("# multi-link fanout sweeps (BFT1, one vmapped dispatch/chunk)")
+    print("links,n_msgs,scenario,window_slots,state_bytes_per_link,"
+          "cold_s,warm_s,complete")
+    for r in rs:
+        print(f"{r['links']},{r['n_msgs']},{r['scenario']},"
+              f"{r['window_slots']},{r['state_bytes_per_link']},"
+              f"{r['cold_s']:.2f},{r['warm_s']:.2f},{r['complete']}")
+    if chain_depth >= 2:
+        c = chain_rows(chain_depth, min(sizes))
+        print("# chained relay pipeline (commit-floor plumbing)")
+        print("links,n_msgs,complete,cold_s,warm_s,first_done,last_done,"
+              "lag_rounds")
+        print(f"{c['links']},{c['n_msgs']},{c['complete']},"
+              f"{c['cold_s']:.2f},{c['warm_s']:.2f},"
+              f"{c['first_hop_done_round']},{c['last_hop_done_round']},"
+              f"{c['pipeline_lag_rounds']}")
+        rs.append(c)
+    if json_path:
+        _dump_json(json_path, rs)
+    return rs
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--links", type=str, default=None,
+                    help="comma-separated link counts (default 2,4,8)")
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma-separated n_msgs sweep (default 2048,8192)")
+    ap.add_argument("--scenarios", type=str, default=None,
+                    help="comma-separated subset of none,crash25,byz")
+    ap.add_argument("--chain-depth", type=int, default=3,
+                    help="clusters in the chained-pipeline section "
+                         "(<2 disables it)")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write the rows as machine-readable JSON")
+    args = ap.parse_args()
+    main(tuple(int(s) for s in args.links.split(","))
+         if args.links else LINKS,
+         tuple(int(s) for s in args.sizes.split(","))
+         if args.sizes else SIZES,
+         tuple(args.scenarios.split(",")) if args.scenarios else SCENARIOS,
+         args.chain_depth, args.json)

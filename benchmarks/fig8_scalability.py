@@ -74,11 +74,12 @@ def scenario_sweep(n: int = 10):
 
     All scenarios share the (n, schedule) shape, so the sweep is a single
     vmap-batched dispatch (``run_picsou_batch``). ``window_slots="auto"``
-    picks the right kernel: at this figure's paper shape (M=128 < auto W)
-    it clamps to the dense batch kernel, and at larger streams the same
-    call runs windowed+batched with per-scenario window bases (see
-    ``bench_windowed --batch`` for that regime); results are bit-identical
-    either way."""
+    picks the right kernel via the one shared clamp rule
+    (``gc.resolve_window_slots``): at this figure's paper shape
+    (M=128 < auto W) it clamps to the dense batch kernel, and at larger
+    streams the same call runs windowed+batched with per-scenario window
+    bases (see ``bench_windowed --batch`` for that regime); results are
+    bit-identical either way."""
     f = max((n - 1) // 3, 1)
     cfg = RSMConfig(n=n, u=f, r=f)
     sim = SimConfig(n_msgs=128, steps=600, window=2, phi=32,

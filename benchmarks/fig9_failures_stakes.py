@@ -47,9 +47,10 @@ def failure_runs(n_seeds: int = 4):
     All placements of one size share shapes/schedules, so the whole seed
     sweep runs as ONE vmap-batched simulation (one compile + one dispatch
     per n) instead of one cached program per scenario.
-    ``window_slots="auto"`` picks the kernel: dense here (M=128 is below
-    the auto window width — and heavy-crash sweeps pin the GC frontier,
-    which the adaptive overflow policy would turn into a dense fallback
+    ``window_slots="auto"`` picks the kernel via the one shared clamp
+    rule (``gc.resolve_window_slots``): dense here (M=128 is below the
+    auto window width — and heavy-crash sweeps pin the GC frontier,
+    which the adaptive overflow policy would migrate to the dense layout
     anyway); windowed+batched engages automatically on larger,
     lighter-failure sweeps (see ``bench_windowed --batch``).
     """

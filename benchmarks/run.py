@@ -9,6 +9,7 @@ function; derived = the table's headline number).
 
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -21,6 +22,13 @@ def _timed(name, fn):
     us = (time.time() - t0) * 1e6
     print(f"{name},{us:.0f},{derived}")
     return derived
+
+
+def _dump_json(path, rows):
+    """Machine-readable perf trajectory (BENCH_*.json next to the run)."""
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    print(f"# wrote {path}")
 
 
 def fig8():
@@ -63,6 +71,7 @@ def kernels():
 def windowed():
     from benchmarks import bench_windowed as m
     rs = m.main()
+    _dump_json("BENCH_windowed.json", rs)
     big = [r for r in rs if r.get("path") == "windowed"][-1]
     dense_big = [r for r in rs if r.get("path") == "dense"
                  and r["n_msgs"] == big["n_msgs"]][0]
@@ -70,6 +79,18 @@ def windowed():
     return (f"state@{big['n_msgs']}={big['state_bytes']}B"
             f"(const,W={big['window_slots']}),dense/windowed_state="
             f"{ratio:.1f}x")
+
+
+def topology():
+    from benchmarks import bench_topology as m
+    rs = m.main(json_path="BENCH_topology.json")
+    fan = [r for r in rs if r["section"] == "fanout"
+           and r["scenario"] == "none"]
+    big = max(fan, key=lambda r: (r["links"], r["n_msgs"]))
+    chain = [r for r in rs if r["section"] == "chain"]
+    lag = chain[-1]["pipeline_lag_rounds"] if chain else "n/a"
+    return (f"{big['links']}links@{big['n_msgs']}msgs_warm="
+            f"{big['warm_s']:.2f}s,chain_lag={lag}rounds")
 
 
 def crosspod():
@@ -93,6 +114,7 @@ def main() -> None:
               ("fig10_heterogeneous", fig10),
               ("thm1_retransmit", thm1),
               ("windowed_sim", windowed),
+              ("topology_apps", topology),
               ("kernels", kernels),
               ("crosspod_collectives", crosspod))
     print("== PICSOU / C3B benchmark suite ==")

@@ -11,7 +11,8 @@ Public API:
 """
 
 from .gc import (ack_floor_from_reports, collectable, default_window_slots,
-                 gc_frontier, gc_frontier_device, grow_window)
+                 gc_frontier, gc_frontier_device, grow_window,
+                 resolve_window_slots)
 from .protocols import (C3BRun, analytic_throughput, ata_loads, ost_loads,
                         picsou_loads, run_picsou, run_picsou_batch)
 from .quack import (claim_bitmask, cumulative_ack, missing_below_horizon,
@@ -23,15 +24,17 @@ from .scheduler import (dss_sequence, hamilton_apportion, lottery_sequence,
                         round_robin_sequence, sender_assignment,
                         skewed_rr_sequence)
 from .simulator import (FailArrays, SimResult, SimSpec, build_spec,
-                        run_simulation, run_simulation_batch)
+                        require_uniform_batch, run_simulation,
+                        run_simulation_batch)
 from .types import (FailureScenario, NetworkModel, RSMConfig, SimConfig,
                     lcm_scale_factors)
 
 __all__ = [
     "RSMConfig", "NetworkModel", "SimConfig", "FailureScenario",
     "SimSpec", "SimResult", "FailArrays", "build_spec", "run_simulation",
-    "run_simulation_batch", "default_window_slots", "gc_frontier",
-    "gc_frontier_device", "grow_window",
+    "run_simulation_batch", "require_uniform_batch",
+    "default_window_slots", "gc_frontier",
+    "gc_frontier_device", "grow_window", "resolve_window_slots",
     "C3BRun", "run_picsou", "run_picsou_batch", "analytic_throughput",
     "picsou_loads", "ata_loads", "ost_loads",
     "cumulative_ack", "claim_bitmask", "missing_below_horizon",

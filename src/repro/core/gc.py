@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from .quack import weighted_quorum_prefix
 
 __all__ = ["collectable", "ack_floor_from_reports", "gc_frontier",
-           "gc_frontier_device", "grow_window", "default_window_slots"]
+           "gc_frontier_device", "grow_window", "default_window_slots",
+           "resolve_window_slots"]
 
 
 def collectable(quacked_prefix: jnp.ndarray, m: int) -> jnp.ndarray:
@@ -54,7 +55,7 @@ def gc_frontier(*, base: int, t_next: int, m: int,
                 known: np.ndarray, bcast_q: np.ndarray,
                 recv_has: np.ndarray, ack_floor: np.ndarray,
                 stakes_r: np.ndarray, quack_thresh: float,
-                orig_step: np.ndarray, crash_r: np.ndarray,
+                orig_sent: np.ndarray, crash_r: np.ndarray,
                 byz_ack_low: np.ndarray) -> int:
     """How many window slots may be retired without changing the run.
 
@@ -64,7 +65,10 @@ def gc_frontier(*, base: int, t_next: int, m: int,
     per-message state can never change again, so the window base may
     advance past them. A slot ``k`` is retirable iff
 
-      * its original send has been dispatched (``orig_step[k] < t_next``),
+      * its original send has actually been dispatched (``orig_sent[k]``;
+        under commit-gated dispatch — chained topologies — the schedule
+        round alone is only a lower bound, so the dispatch *bit* is what
+        proves the slot can no longer originate),
       * it is QUACKed at *every* sender — so no sender can ever declare a
         loss / resend / re-quack it (§4.3: the quacked prefix is what both
         sides are allowed to forget),
@@ -86,7 +90,7 @@ def gc_frontier(*, base: int, t_next: int, m: int,
     w_known = np.einsum("ljm,j->lm", known.astype(np.float32),
                         np.asarray(stakes_r, dtype=np.float32))
     quacked_everywhere = (w_known >= np.float32(quack_thresh)).all(axis=0)
-    dispatched = np.asarray(orig_step)[:w] < t_next
+    dispatched = np.asarray(orig_sent)[:w]
     no_pending_bcast = ~bcast_q.any(axis=0)
     relevant = ((np.asarray(crash_r) < 0) | (np.asarray(crash_r) > t_next))
     relevant = relevant & ~np.asarray(byz_ack_low)
@@ -100,7 +104,7 @@ def gc_frontier(*, base: int, t_next: int, m: int,
 def gc_frontier_device(*, base, t_next, m: int,
                        known, bcast_q, recv_has, ack_floor,
                        stakes_r, quack_thresh: float,
-                       orig_step, crash_r, byz_ack_low):
+                       orig_sent, crash_r, byz_ack_low):
     """Traced (jnp) port of :func:`gc_frontier` — runs inside the chunk.
 
     Same retirement rule, evaluated on device so the sliding-window
@@ -111,17 +115,17 @@ def gc_frontier_device(*, base, t_next, m: int,
     like the compiled QUACK decision and the numpy oracle above, so all
     three agree bit-for-bit.
 
-    ``orig_step`` is the (W,) window slice of the padded dispatch
-    schedule; ``crash_r``/``byz_ack_low`` come from the traced
-    ``FailArrays``. Returns a () int32 — the number of leading window
-    slots that may be retired.
+    ``orig_sent`` is the (W,) window slice of the carried dispatch bits
+    (``SimState.orig_sent``); ``crash_r``/``byz_ack_low`` come from the
+    traced ``FailArrays``. Returns a () int32 — the number of leading
+    window slots that may be retired.
     """
     w = known.shape[-1]
     abs_idx = (base + jnp.arange(w, dtype=jnp.int32)).astype(jnp.int32)
     w_known = jnp.einsum("ljm,j->lm", known.astype(jnp.float32),
                          stakes_r.astype(jnp.float32))
     quacked_everywhere = (w_known >= jnp.float32(quack_thresh)).all(axis=0)
-    dispatched = orig_step < t_next
+    dispatched = orig_sent
     no_pending_bcast = ~bcast_q.any(axis=0)
     relevant = ((crash_r < 0) | (crash_r > t_next)) & ~byz_ack_low
     eff = recv_has | (abs_idx[None, :] < ack_floor[:, None])
@@ -139,7 +143,8 @@ def grow_window(w: int, base: int, need: int, m: int) -> Optional[int]:
     the window ``[base, base + w)``. Double ``w`` until the window covers
     ``need`` again; if the required width would reach the full stream
     length ``m``, windowing buys nothing over the dense state — return
-    ``None`` to signal the caller to fall back to the dense kernel.
+    ``None`` to signal the caller to migrate the scan state into the
+    dense layout (base 0, W = M) and continue from there.
     """
     new_w = max(int(w), 1)
     while need >= base + new_w:
@@ -164,3 +169,24 @@ def default_window_slots(n_s: int, n_r: int, send_window: int, phi: int,
     lag = chunk_steps + n_s + n_r + slack_rounds
     w = n_s * max(send_window, 1) * lag + phi
     return int(-(-w // 64) * 64)
+
+
+def resolve_window_slots(window_slots, *, n_s: int, n_r: int,
+                         send_window: int, phi: int, chunk_steps: int,
+                         m: int) -> int:
+    """Resolve ``SimConfig.window_slots`` (None | "auto" | int) to a width.
+
+    Returns the concrete window width W, with 0 meaning the dense
+    (full-M) kernel. ``"auto"`` sizes W via :func:`default_window_slots`
+    and clamps to dense when the computed W would not be smaller than M —
+    windowing would buy nothing there. This is the single home of the
+    auto→dense clamp rule, shared by ``build_spec`` and the bench/figure
+    wiring (``bench_windowed``, ``bench_topology``, fig8/fig9), so the
+    kernel-selection story cannot drift between them.
+    """
+    if window_slots is None:
+        return 0
+    if window_slots == "auto":
+        w = default_window_slots(n_s, n_r, send_window, phi, chunk_steps)
+        return 0 if w >= m else w
+    return int(window_slots)

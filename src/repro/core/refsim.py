@@ -5,19 +5,30 @@ protocol logic can be read top-to-bottom against §4–§5 of the paper and the
 vectorized implementation can be cross-checked exactly
 (``tests/test_simulator.py::test_jax_matches_reference``).
 
+The per-round transition lives in :class:`_RefMachine` so it can be driven
+two ways: ``run_reference`` replays one link exactly like ``run_simulation``
+(including the sliding-window mirror below), and the multi-link topology
+oracle (``repro.topology.refmirror``) drives one machine per link with the
+same chunk boundaries and commit-floor plumbing as the vmapped topology
+engine. Original dispatch is commit-gated exactly like the device kernel:
+message ``k`` is attempted at the first round ``t >= orig_step[k]`` with
+``k < commit_floor`` (a standalone link has ``commit_floor == m``, which
+reduces the gate to the ungated schedule).
+
 For a windowed spec (``spec.window_slots > 0``) the oracle also mirrors
 the sliding-window machinery: it keeps full dense state (it is the
 *oracle*, it never forgets) but advances the same GC frontier with the
 same shared ``gc.gc_frontier`` rule at the same chunk boundaries as the
 jax windowed path — including the adaptive overflow policy
 (``gc.grow_window``: widen the mirrored window 2x when a stalled frontier
-would overflow it, or mark the run as fallen back to dense, in which case
-``gc_frontiers`` collapses to the trivial ``[0]`` trajectory exactly like
-``SimResult``) — snapshots every retired slot's outputs at retirement
-time, and asserts at the end of the run that none of them ever changed
-afterwards. That is the ground truth for the windowed core: if the
-retirement rule ever forgot a slot whose state could still move, the
-snapshot check fails here first. The frontier trajectory is returned in
+would overflow it; when the doubling would reach M the jax path migrates
+its scan state into the dense layout and keeps rotating, which the oracle
+mirrors by widening its window to M and carrying the frontier trajectory
+on) — snapshots every retired slot's outputs at retirement time, and
+asserts at the end of the run that none of them ever changed afterwards.
+That is the ground truth for the windowed core: if the retirement rule
+ever forgot a slot whose state could still move, the snapshot check fails
+here first. The frontier trajectory is returned in
 ``RefResult.gc_frontiers`` so tests can compare it bit-for-bit against
 ``SimResult.gc_frontiers``, and ``RefResult.retired_quack_margin`` records
 the smallest stake-weighted QUACK margin over all retired slots (a retired
@@ -33,8 +44,7 @@ from typing import List, Optional
 import numpy as np
 
 from .gc import gc_frontier
-from .simulator import (SimSpec, _NEVER_STEP, _max_msg_by_round,
-                        _widen_on_overflow)
+from .simulator import (SimSpec, _max_msg_by_round, _widen_on_overflow)
 
 __all__ = ["run_reference"]
 
@@ -91,77 +101,70 @@ def _quorum_prefix(vals: np.ndarray, stakes: np.ndarray, thr: float) -> int:
     return 0
 
 
-def run_reference(spec: SimSpec) -> RefResult:
-    n_s, n_r, m, phi = spec.n_s, spec.n_r, spec.m, spec.phi
-    st_s = np.asarray(spec.stakes_s)
-    st_r = np.asarray(spec.stakes_r)
-    orig_sender = np.asarray(spec.orig_sender)
-    orig_recv = np.asarray(spec.orig_recv)
-    orig_step = np.asarray(spec.orig_step)
-    rs_seq = np.asarray(spec.rs_seq)
-    rr_seq = np.asarray(spec.rr_seq)
-    ls, lr = len(rs_seq), len(rr_seq)
-    crash_s = np.asarray(spec.crash_s)
-    crash_r = np.asarray(spec.crash_r)
-    byz_send_drop = np.asarray(spec.byz_send_drop)
-    byz_recv_drop = np.asarray(spec.byz_recv_drop)
-    byz_ack_advance = np.asarray(spec.byz_ack_advance)
-    byz_ack_low = np.asarray(spec.byz_ack_low)
-    byz_bcast_partial = np.asarray(spec.byz_bcast_partial)
-    honest_r = ((crash_r < 0) & ~(byz_recv_drop | byz_ack_low
-                                  | (byz_ack_advance > 0)
-                                  | byz_bcast_partial))
+class _RefMachine:
+    """One link's full protocol state + per-round transition (explicit
+    loops). ``step(t, commit_floor)`` advances one synchronous round;
+    ``frontier``/``retire`` mirror the device chunk-boundary rotation."""
 
-    recv_has = np.zeros((n_r, m), dtype=bool)
-    bcast_q = np.zeros((n_r, m), dtype=bool)
-    bcast_done = np.zeros((n_r, m), dtype=bool)
-    known = np.zeros((n_s, n_r, m), dtype=bool)
-    complaint = np.zeros((n_s, n_r, m), dtype=bool)
-    repeat_c = np.zeros((n_s, n_r, m), dtype=bool)
-    last_cum = np.full((n_s, n_r), -1, dtype=np.int64)
-    retry = np.zeros((n_s, m), dtype=np.int64)
-    quack_time = np.full((n_s, m), -1, dtype=np.int64)
-    deliver_time = np.full(m, -1, dtype=np.int64)
-    hq_reports = np.zeros((n_r, n_s), dtype=np.int64)
-    ack_floor = np.zeros(n_r, dtype=np.int64)
+    def __init__(self, spec: SimSpec):
+        self.spec = spec
+        self.n_s, self.n_r, self.m = spec.n_s, spec.n_r, spec.m
+        self.phi = spec.phi
+        self.st_s = np.asarray(spec.stakes_s)
+        self.st_r = np.asarray(spec.stakes_r)
+        self.orig_sender = np.asarray(spec.orig_sender)
+        self.orig_recv = np.asarray(spec.orig_recv)
+        self.orig_step = np.asarray(spec.orig_step)
+        self.rs_seq = np.asarray(spec.rs_seq)
+        self.rr_seq = np.asarray(spec.rr_seq)
+        self.crash_s = np.asarray(spec.crash_s)
+        self.crash_r = np.asarray(spec.crash_r)
+        self.byz_send_drop = np.asarray(spec.byz_send_drop)
+        self.byz_recv_drop = np.asarray(spec.byz_recv_drop)
+        self.byz_ack_advance = np.asarray(spec.byz_ack_advance)
+        self.byz_ack_low = np.asarray(spec.byz_ack_low)
+        self.byz_bcast_partial = np.asarray(spec.byz_bcast_partial)
+        self.honest_r = ((self.crash_r < 0)
+                         & ~(self.byz_recv_drop | self.byz_ack_low
+                             | (self.byz_ack_advance > 0)
+                             | self.byz_bcast_partial))
 
-    cross_hist: List[int] = []
-    intra_hist: List[int] = []
-    resend_hist: List[int] = []
+        n_s, n_r, m = self.n_s, self.n_r, self.m
+        self.recv_has = np.zeros((n_r, m), dtype=bool)
+        self.bcast_q = np.zeros((n_r, m), dtype=bool)
+        self.bcast_done = np.zeros((n_r, m), dtype=bool)
+        self.orig_sent = np.zeros(m, dtype=bool)
+        self.known = np.zeros((n_s, n_r, m), dtype=bool)
+        self.complaint = np.zeros((n_s, n_r, m), dtype=bool)
+        self.repeat_c = np.zeros((n_s, n_r, m), dtype=bool)
+        self.last_cum = np.full((n_s, n_r), -1, dtype=np.int64)
+        self.retry = np.zeros((n_s, m), dtype=np.int64)
+        self.quack_time = np.full((n_s, m), -1, dtype=np.int64)
+        self.deliver_time = np.full(m, -1, dtype=np.int64)
+        self.hq_reports = np.zeros((n_r, n_s), dtype=np.int64)
+        self.ack_floor = np.zeros(n_r, dtype=np.int64)
 
-    # --- sliding-window mirror (windowed specs only) ----------------------
-    win = spec.window_slots
-    chunk = max(spec.chunk_steps, 1)
-    base = 0
-    bases = [0] if win else None
-    dense_fallback = False
-    retired_snaps = []        # (k, quack_time col, deliver, retry col, recv col)
-    retired_margin = np.inf
-    # pad enough for the widest window adaptive growth can reach (< m)
-    orig_step_pad = np.concatenate(
-        [orig_step, np.full(max(win, 1) + m, _NEVER_STEP,
-                            dtype=orig_step.dtype)])
-    dispatched_by = _max_msg_by_round(spec) if win else None
+        self.cross_hist: List[int] = []
+        self.intra_hist: List[int] = []
+        self.resend_hist: List[int] = []
+        # (k, quack col, deliver, retry col, recv col) at retirement time
+        self.retired_snaps: list = []
+        self.retired_margin = np.inf
 
-    def quacked_at(l: int) -> np.ndarray:
-        w = (known[l].astype(np.float64) * st_r[:, None]).sum(axis=0)
-        return w >= spec.quack_thresh
+    def quacked_at(self, l: int) -> np.ndarray:
+        w = (self.known[l].astype(np.float64)
+             * self.st_r[:, None]).sum(axis=0)
+        return w >= self.spec.quack_thresh
 
-    for t in range(spec.steps):
-        # (0) window mirror: adaptive overflow policy at chunk starts,
-        # exactly where the jax windowed path checks before a chunk.
-        if win and not dense_fallback and t % chunk == 0:
-            chunk_end = min(t + chunk, spec.steps) - 1
-            need = int(dispatched_by[chunk_end])
-            if need >= base + win:
-                new_w = _widen_on_overflow(spec, win, base, need, chunk_end)
-                if new_w is None:
-                    dense_fallback = True
-                else:
-                    win = new_w
+    def delivered_prefix(self) -> int:
+        return _cum(self.deliver_time >= 0)
 
-        alive_s = (crash_s < 0) | (t < crash_s)
-        alive_r = (crash_r < 0) | (t < crash_r)
+    def step(self, t: int, commit_floor: Optional[int] = None) -> None:
+        spec = self.spec
+        n_s, n_r, m, phi = self.n_s, self.n_r, self.m, self.phi
+        floor = m if commit_floor is None else int(commit_floor)
+        alive_s = (self.crash_s < 0) | (t < self.crash_s)
+        alive_r = (self.crash_r < 0) | (t < self.crash_r)
 
         # (1) broadcasts land
         intra = 0
@@ -170,139 +173,191 @@ def run_reference(spec: SimSpec) -> RefResult:
             if not alive_r[j]:
                 continue
             for k in range(m):
-                if bcast_q[j, k]:
+                if self.bcast_q[j, k]:
                     targets = (range(min(spec.bcast_limit, n_r))
-                               if byz_bcast_partial[j] else range(n_r))
+                               if self.byz_bcast_partial[j] else range(n_r))
                     for i in targets:
                         if i == j:
                             continue
                         intra += 1
                         if alive_r[i]:
                             new_recv[i, k] = True
-                    bcast_done[j, k] = True
-        bcast_q[:] = False
-        recv_has |= new_recv
+                    self.bcast_done[j, k] = True
+        self.bcast_q[:] = False
+        self.recv_has |= new_recv
 
-        # (2) retransmissions (from knowledge as of t-1)
+        # (2) retransmissions (from knowledge as of t-1; only messages
+        # whose original dispatch already happened — the sent bit, not the
+        # schedule round, under commit-gated dispatch)
         resends = []  # (sender, msg, target)
         for l in range(n_s):
-            qk = quacked_at(l)
+            qk = self.quacked_at(l)
             for k in range(m):
-                w = float((repeat_c[l, :, k] * st_r).sum())
-                if w >= spec.dup_thresh and not qk[k] and orig_step[k] < t:
-                    retry[l, k] += 1
-                    complaint[l, :, k] = False
-                    repeat_c[l, :, k] = False
-                    if rs_seq[(k + retry[l, k]) % ls] == l:
-                        if alive_s[l] and not byz_send_drop[l]:
-                            tgt = rr_seq[(orig_recv[k] + retry[l, k]) % lr]
+                w = float((self.repeat_c[l, :, k] * self.st_r).sum())
+                if (w >= spec.dup_thresh and not qk[k]
+                        and self.orig_sent[k]):
+                    self.retry[l, k] += 1
+                    self.complaint[l, :, k] = False
+                    self.repeat_c[l, :, k] = False
+                    if self.rs_seq[(k + self.retry[l, k])
+                                   % len(self.rs_seq)] == l:
+                        if alive_s[l] and not self.byz_send_drop[l]:
+                            tgt = self.rr_seq[(self.orig_recv[k]
+                                               + self.retry[l, k])
+                                              % len(self.rr_seq)]
                             resends.append((l, k, int(tgt)))
 
-        # (3) original sends + landing
+        # (3) original sends + landing: a message is due once its schedule
+        # round has passed AND its entry is committed on the source RSM;
+        # the dispatch attempt happens exactly once, alive or not.
         wire = []  # (sender, msg, target)
         for k in range(m):
-            if orig_step[k] == t:
-                l = orig_sender[k]
-                if alive_s[l] and not byz_send_drop[l]:
-                    wire.append((int(l), k, int(orig_recv[k])))
+            if (self.orig_sent[k] or self.orig_step[k] > t or k >= floor):
+                continue
+            self.orig_sent[k] = True
+            l = self.orig_sender[k]
+            if alive_s[l] and not self.byz_send_drop[l]:
+                wire.append((int(l), k, int(self.orig_recv[k])))
         wire.extend(resends)
-        qp_prev = np.array([int(np.cumprod(quacked_at(l)).sum())
+        qp_prev = np.array([int(np.cumprod(self.quacked_at(l)).sum())
                             for l in range(n_s)])
         for (l, k, i) in wire:
             if alive_r[i]:
-                hq_reports[i, l] = max(hq_reports[i, l], qp_prev[l])
-                if not byz_recv_drop[i]:
-                    if not recv_has[i, k]:
-                        recv_has[i, k] = True
-                        if not bcast_done[i, k]:
-                            bcast_q[i, k] = True
+                self.hq_reports[i, l] = max(self.hq_reports[i, l],
+                                            qp_prev[l])
+                if not self.byz_recv_drop[i]:
+                    if not self.recv_has[i, k]:
+                        self.recv_has[i, k] = True
+                        if not self.bcast_done[i, k]:
+                            self.bcast_q[i, k] = True
         for k in range(m):
-            if deliver_time[k] < 0 and (recv_has[:, k] & honest_r).any():
-                deliver_time[k] = t
+            if (self.deliver_time[k] < 0
+                    and (self.recv_has[:, k] & self.honest_r).any()):
+                self.deliver_time[k] = t
 
         # (4) acks
         for j in range(n_r):
             if not alive_r[j]:
                 continue
-            ack_floor[j] = max(ack_floor[j],
-                               _quorum_prefix(hq_reports[j], st_s,
-                                              spec.hq_thresh))
-            eff = recv_has[j].copy()
-            eff[:ack_floor[j]] = True
+            self.ack_floor[j] = max(
+                self.ack_floor[j],
+                _quorum_prefix(self.hq_reports[j], self.st_s,
+                               spec.hq_thresh))
+            eff = self.recv_has[j].copy()
+            eff[:self.ack_floor[j]] = True
             cum, claim, missing = _claim_and_missing(eff, phi)
-            if byz_ack_low[j]:
+            if self.byz_ack_low[j]:
                 cum, claim, missing = 0, np.zeros(m, bool), list(range(phi))
-            elif byz_ack_advance[j] > 0:
-                cum = min(cum + int(byz_ack_advance[j]), m)
+            elif self.byz_ack_advance[j] > 0:
+                cum = min(cum + int(self.byz_ack_advance[j]), m)
                 claim = np.arange(m) < cum
                 missing = []
             l = (j + t) % n_s
-            known[l, j] |= claim
+            self.known[l, j] |= claim
             newc = np.zeros(m, dtype=bool)
             for k in missing:
                 if k < m:
                     newc[k] = True
-            if last_cum[l, j] == cum and cum < m:
+            if self.last_cum[l, j] == cum and cum < m:
                 newc[cum] = True
-            repeat_c[l, j] |= complaint[l, j] & newc
-            complaint[l, j] = newc
-            last_cum[l, j] = cum
+            self.repeat_c[l, j] |= self.complaint[l, j] & newc
+            self.complaint[l, j] = newc
+            self.last_cum[l, j] = cum
 
         # (5) QUACK bookkeeping
         for l in range(n_s):
-            qk = quacked_at(l)
-            newly = qk & (quack_time[l] < 0)
-            quack_time[l, newly] = t
+            qk = self.quacked_at(l)
+            newly = qk & (self.quack_time[l] < 0)
+            self.quack_time[l, newly] = t
 
-        cross_hist.append(len(wire))
-        intra_hist.append(intra)
-        resend_hist.append(len(resends))
+        self.cross_hist.append(len(wire))
+        self.intra_hist.append(intra)
+        self.resend_hist.append(len(resends))
+
+    def frontier(self, base: int, win: int, t_next: int) -> int:
+        """Shared §4.3 retirement rule over window ``[base, base+win)``."""
+        lo, hi = base, base + win
+        return gc_frontier(
+            base=base, t_next=t_next, m=self.m,
+            known=self.known[:, :, lo:hi], bcast_q=self.bcast_q[:, lo:hi],
+            recv_has=self.recv_has[:, lo:hi], ack_floor=self.ack_floor,
+            stakes_r=self.st_r, quack_thresh=self.spec.quack_thresh,
+            orig_sent=self.orig_sent[lo:hi], crash_r=self.crash_r,
+            byz_ack_low=self.byz_ack_low)
+
+    def retire(self, base: int, f: int) -> None:
+        """Snapshot slots ``[base, base+f)`` at retirement time."""
+        for k in range(base, base + f):
+            # float32 like the device QUACK einsum (see gc_frontier)
+            w_k = (self.known[:, :, k].astype(np.float32)
+                   * self.st_r[None, :].astype(np.float32)).sum(axis=1)
+            self.retired_margin = min(self.retired_margin,
+                                      float(w_k.min()))
+            self.retired_snaps.append((k, self.quack_time[:, k].copy(),
+                                       self.deliver_time[k],
+                                       self.retry[:, k].copy(),
+                                       self.recv_has[:, k].copy()))
+
+    def assert_retirement_safe(self) -> None:
+        """A retired slot's outputs must never change again."""
+        for (k, qt, dt, rt, rh) in self.retired_snaps:
+            assert np.array_equal(qt, self.quack_time[:, k]), (
+                f"retired slot {k}: quack_time changed after retirement")
+            assert dt == self.deliver_time[k], (
+                f"retired slot {k}: deliver_time changed after retirement")
+            assert np.array_equal(rt, self.retry[:, k]), (
+                f"retired slot {k}: retry changed after retirement")
+            assert np.array_equal(rh, self.recv_has[:, k]), (
+                f"retired slot {k}: recv_has changed after retirement")
+
+    def result(self, frontiers: Optional[np.ndarray],
+               windowed: bool) -> RefResult:
+        return RefResult(
+            quack_time=self.quack_time, deliver_time=self.deliver_time,
+            retry=self.retry, recv_has=self.recv_has,
+            cross_msgs=np.array(self.cross_hist),
+            intra_msgs=np.array(self.intra_hist),
+            resends=np.array(self.resend_hist),
+            gc_frontiers=frontiers,
+            retired_quack_margin=(self.retired_margin if windowed
+                                  else None))
+
+
+def run_reference(spec: SimSpec) -> RefResult:
+    mac = _RefMachine(spec)
+
+    # --- sliding-window mirror (windowed specs only) ----------------------
+    win = spec.window_slots
+    chunk = max(spec.chunk_steps, 1)
+    base = 0
+    bases = [0] if win else None
+    dispatched_by = _max_msg_by_round(spec) if win else None
+
+    for t in range(spec.steps):
+        # (0) window mirror: adaptive overflow policy at chunk starts,
+        # exactly where the jax windowed path checks before a chunk.
+        if win and t % chunk == 0:
+            chunk_end = min(t + chunk, spec.steps) - 1
+            need = int(dispatched_by[chunk_end])
+            if need >= base + win:
+                new_w = _widen_on_overflow(spec, win, base, need, chunk_end)
+                # None => the jax path migrates its scan state into the
+                # dense layout (W = M) and keeps rotating; mirror by
+                # widening the window to M and carrying the trajectory on.
+                win = spec.m if new_w is None else new_w
+
+        mac.step(t)
 
         # (6) window mirror: advance the GC frontier at chunk boundaries,
         # exactly where the jax windowed path rotates its ring buffers
         # in-graph.
         t_next = t + 1
-        if (win and not dense_fallback and t_next % chunk == 0
-                and t_next < spec.steps):
-            lo, hi = base, base + win
-            f = gc_frontier(
-                base=base, t_next=t_next, m=m,
-                known=known[:, :, lo:hi], bcast_q=bcast_q[:, lo:hi],
-                recv_has=recv_has[:, lo:hi], ack_floor=ack_floor,
-                stakes_r=st_r, quack_thresh=spec.quack_thresh,
-                orig_step=orig_step_pad[lo:hi], crash_r=crash_r,
-                byz_ack_low=byz_ack_low)
-            for k in range(base, base + f):
-                # float32 like the device QUACK einsum (see gc_frontier)
-                w_k = (known[:, :, k].astype(np.float32)
-                       * st_r[None, :].astype(np.float32)).sum(axis=1)
-                retired_margin = min(retired_margin, float(w_k.min()))
-                retired_snaps.append((k, quack_time[:, k].copy(),
-                                      deliver_time[k], retry[:, k].copy(),
-                                      recv_has[:, k].copy()))
+        if win and t_next % chunk == 0 and t_next < spec.steps:
+            f = mac.frontier(base, win, t_next)
+            mac.retire(base, f)
             base += f
             bases.append(base)
 
-    # retirement safety: a retired slot's outputs must never change again.
-    for (k, qt, dt, rt, rh) in retired_snaps:
-        assert np.array_equal(qt, quack_time[:, k]), (
-            f"retired slot {k}: quack_time changed after retirement")
-        assert dt == deliver_time[k], (
-            f"retired slot {k}: deliver_time changed after retirement")
-        assert np.array_equal(rt, retry[:, k]), (
-            f"retired slot {k}: retry changed after retirement")
-        assert np.array_equal(rh, recv_has[:, k]), (
-            f"retired slot {k}: recv_has changed after retirement")
-
-    if win and dense_fallback:
-        frontiers = np.zeros(1, dtype=np.int64)   # mirrors SimResult
-    elif win:
-        frontiers = np.asarray(bases, dtype=np.int64)
-    else:
-        frontiers = None
-    return RefResult(
-        quack_time=quack_time, deliver_time=deliver_time, retry=retry,
-        recv_has=recv_has, cross_msgs=np.array(cross_hist),
-        intra_msgs=np.array(intra_hist), resends=np.array(resend_hist),
-        gc_frontiers=frontiers,
-        retired_quack_margin=(retired_margin if win else None))
+    mac.assert_retirement_safe()
+    frontiers = np.asarray(bases, dtype=np.int64) if win else None
+    return mac.result(frontiers, bool(win))

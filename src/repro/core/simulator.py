@@ -71,13 +71,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import scheduler as sched
-from .gc import default_window_slots, gc_frontier_device, grow_window
+from .gc import gc_frontier_device, grow_window, resolve_window_slots
 from .quack import claim_bitmask, missing_below_horizon, weighted_quorum_prefix
 from .types import (COUNTER_BYTES, MAC_BYTES, SEQNO_BYTES, FailureScenario,
                     NetworkModel, RSMConfig, SimConfig, lcm_scale_factors)
 
 __all__ = ["SimSpec", "SimResult", "FailArrays", "build_spec",
-           "run_simulation", "run_simulation_batch"]
+           "run_simulation", "run_simulation_batch",
+           "require_uniform_batch"]
 
 NEVER = jnp.int32(-1)
 _NEVER_STEP = 2 ** 30     # orig_step pad for window slots beyond the stream
@@ -130,7 +131,16 @@ class SimSpec:
 
 
 class FailArrays(NamedTuple):
-    """Failure masks as traced device arrays (one compile per *shape*)."""
+    """Per-scenario traced inputs (one compile per *shape*).
+
+    Mostly failure masks; ``commit_floor`` is the commit-gated dispatch
+    boundary for chained topologies: message ``k`` may only be originated
+    once ``k < commit_floor`` (its entry is committed on the source RSM's
+    log). A standalone link is fully committed from the start
+    (``commit_floor == m``), which reduces the gate to a no-op; the
+    topology engine raises a downstream link's floor between chunks as
+    its upstream link retires delivered prefix.
+    """
 
     crash_s: jnp.ndarray           # (n_s,) int32, -1 = never
     crash_r: jnp.ndarray           # (n_r,) int32
@@ -140,12 +150,14 @@ class FailArrays(NamedTuple):
     byz_ack_low: jnp.ndarray       # (n_r,) bool
     byz_bcast_partial: jnp.ndarray  # (n_r,) bool
     bcast_limit: jnp.ndarray       # () int32
+    commit_floor: jnp.ndarray      # () int32 — dispatch gate (abs seqno)
 
 
 class SimState(NamedTuple):
     recv_has: jnp.ndarray      # (n_r, W) bool — receiver truly holds slot
     bcast_q: jnp.ndarray       # (n_r, W) bool — queued broadcast for t+1
     bcast_done: jnp.ndarray    # (n_r, W) bool
+    orig_sent: jnp.ndarray     # (W,) bool — original dispatch attempted
     known: jnp.ndarray         # (n_s, n_r, W) bool — j's claims known to l
     complaint: jnp.ndarray     # (n_s, n_r, W) bool — j's last complaint to l
     repeat_c: jnp.ndarray      # (n_s, n_r, W) bool — complained twice to l
@@ -283,16 +295,9 @@ def build_spec(sender: RSMConfig, receiver: RSMConfig,
             return tuple([default] * n)
         return tuple(x)
 
-    ws = sim.window_slots
-    if ws is None:
-        w_slots = 0
-    elif ws == "auto":
-        w_slots = default_window_slots(n_s, n_r, sim.window, sim.phi,
-                                       sim.chunk_steps)
-        if w_slots >= m:
-            w_slots = 0        # window >= stream: dense is strictly better
-    else:
-        w_slots = int(ws)
+    w_slots = resolve_window_slots(
+        sim.window_slots, n_s=n_s, n_r=n_r, send_window=sim.window,
+        phi=sim.phi, chunk_steps=sim.chunk_steps, m=m)
 
     return SimSpec(
         n_s=n_s, n_r=n_r, m=m, steps=sim.steps, phi=sim.phi,
@@ -330,6 +335,7 @@ def _fail_arrays(spec: SimSpec) -> FailArrays:
         byz_ack_low=jnp.asarray(spec.byz_ack_low, dtype=bool),
         byz_bcast_partial=jnp.asarray(spec.byz_bcast_partial, dtype=bool),
         bcast_limit=jnp.int32(max(spec.bcast_limit, 0)),
+        commit_floor=jnp.int32(spec.m),
     )
 
 
@@ -393,9 +399,12 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
         quacked_msg_prev = (jnp.einsum("ljm,j->lm",
                                        state.known.astype(jnp.float32),
                                        stakes_r) >= spec.quack_thresh)
+        # losses can only be declared for messages whose original dispatch
+        # already happened; under commit gating the dispatch bit (not the
+        # schedule round) is what proves that.
         declared = ((w_complaints >= spec.dup_thresh)
                     & ~quacked_msg_prev
-                    & (orig_step[None, :] < t))
+                    & state.orig_sent[None, :])
         retry_new = state.retry + declared.astype(jnp.int32)
         # Fig. 6: the a-th retransmission of k is sent by the a-th successor
         # of the original sender: sender_new = (orig + #retransmit) mod n_s.
@@ -409,8 +418,16 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
         re_target = rr_seq[(orig_recv[None, :] + retry_new) % lr]  # (n_s, W)
 
         # (3) original sends + landing --------------------------------------
-        orig_ok = ((orig_step == t) & alive_s[orig_sender]
+        # a message is due once its schedule round has passed AND its
+        # entry is committed on the source RSM (commit_floor gate); the
+        # dispatch attempt happens exactly once (orig_sent), whether or
+        # not the scheduled sender is still alive — matching the ungated
+        # semantics where a crashed sender's message is simply never sent.
+        due = ((orig_step <= t) & (abs_idx < fail.commit_floor)
+               & ~state.orig_sent)
+        orig_ok = (due & alive_s[orig_sender]
                    & ~fail.byz_send_drop[orig_sender])
+        orig_sent = state.orig_sent | due
         s_orig = orig_ok[None, :] & (orig_recv[None, :] == idx_r[:, None])
         s_re = (jnp.einsum("lm,lim->im", resend.astype(jnp.int32),
                            (re_target[:, None, :] == idx_r[None, :, None])
@@ -482,6 +499,7 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
 
         new_state = SimState(
             recv_has=recv_has, bcast_q=bcast_q, bcast_done=bcast_done,
+            orig_sent=orig_sent,
             known=known, complaint=complaint, repeat_c=repeat_c,
             last_cum=last_cum, retry=retry_new, quack_time=quack_time,
             deliver_time=deliver_time, hq_reports=hq_reports,
@@ -512,16 +530,21 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
 # so the three constructors cannot drift when a field is added (a wrong
 # tail fill would compile fine and corrupt only long/adversarial runs).
 _WINDOW_FILLS = dict(recv_has=False, bcast_q=False, bcast_done=False,
-                     known=False, complaint=False, repeat_c=False,
-                     retry=0, quack_time=-1, deliver_time=-1)
+                     orig_sent=False, known=False, complaint=False,
+                     repeat_c=False, retry=0, quack_time=-1, deliver_time=-1)
+
+
+def _window_shapes(n_s: int, n_r: int, w: int) -> dict:
+    """Window-indexed SimState field -> shape at window width ``w``."""
+    return dict(recv_has=(n_r, w), bcast_q=(n_r, w), bcast_done=(n_r, w),
+                orig_sent=(w,), known=(n_s, n_r, w),
+                complaint=(n_s, n_r, w), repeat_c=(n_s, n_r, w),
+                retry=(n_s, w), quack_time=(n_s, w), deliver_time=(w,))
 
 
 def _init_state(spec: SimSpec, w: int) -> SimState:
     n_s, n_r = spec.n_s, spec.n_r
-    shapes = dict(recv_has=(n_r, w), bcast_q=(n_r, w), bcast_done=(n_r, w),
-                  known=(n_s, n_r, w), complaint=(n_s, n_r, w),
-                  repeat_c=(n_s, n_r, w), retry=(n_s, w),
-                  quack_time=(n_s, w), deliver_time=(w,))
+    shapes = _window_shapes(n_s, n_r, w)
     window = {
         name: jnp.full(shapes[name], fill,
                        dtype=(bool if isinstance(fill, bool) else jnp.int32))
@@ -629,7 +652,7 @@ def _build_chunk(nspec: SimSpec, w_slots: int, chunk_len: int, rotate: bool):
             known=state.known, bcast_q=state.bcast_q,
             recv_has=state.recv_has, ack_floor=state.ack_floor,
             stakes_r=stakes_r32, quack_thresh=nspec.quack_thresh,
-            orig_step=sl(ostep_p), crash_r=fail.crash_r,
+            orig_sent=state.orig_sent, crash_r=fail.crash_r,
             byz_ack_low=fail.byz_ack_low)
         queue = ChunkQueue(state.quack_time, state.deliver_time,
                            state.retry, state.recv_has, base0, f)
@@ -675,15 +698,77 @@ def _grow_state(state: SimState, new_w: int) -> SimState:
 
 def _widen_on_overflow(spec: SimSpec, w: int, base: int, need: int,
                        t: int) -> Optional[int]:
-    """Overflow policy: raise (strict), grow 2x, or None => dense fallback."""
+    """Overflow policy: raise (strict), grow 2x, or None => dense layout.
+
+    ``None`` tells the caller to migrate the windowed scan state into the
+    dense layout (base 0, W = M) and continue — no rerun from scratch.
+    """
     if not spec.adaptive_window:
         raise ValueError(
             f"sliding window overflow: round {t} dispatches message "
             f"{need} but the window covers [{base}, {base + w}) — the GC "
             f"frontier is {base}. Increase SimConfig.window_slots (or use "
             f"window_slots='auto'), or leave adaptive_window=True for "
-            f"automatic growth / dense fallback.")
+            f"automatic growth / dense-layout migration.")
     return grow_window(w, base, need, spec.m)
+
+
+def _migrate_dense_batch(spec: SimSpec, state: SimState,
+                         bases: np.ndarray, out_quack: np.ndarray,
+                         out_deliver: np.ndarray, out_retry: np.ndarray,
+                         out_recv: np.ndarray) -> SimState:
+    """Embed the windowed scan state into the dense layout (base 0, W=M).
+
+    Adaptive-growth endpoint: when the next doubling would reach the full
+    stream length, the run keeps its partial progress instead of rerunning
+    on the dense kernel from round 0. Live window columns land at their
+    absolute positions ``[base_b, base_b + W)``; columns below each
+    scenario's base are reconstructed from the already-drained retired
+    outputs plus the retirement invariants themselves — a retired slot is
+    QUACKed at *every* sender (``known`` may be set all-True without
+    changing any threshold decision), effectively received at every
+    receiver that still matters (``recv_has`` restored from the drained
+    snapshot; the rest is covered by the preserved ack floor), has no
+    broadcast pending and its original send dispatched. Per-replica state
+    (``last_cum``/``hq_reports``/``ack_floor``) carries over unchanged, so
+    the continued run is bit-identical in every observable output to a
+    dense run from round 0 (``tests/test_windowed.py``).
+
+    One-off host-side transform (numpy in, device out) — the steady-state
+    chunk loop still never round-trips the scan state.
+    """
+    n_b = len(bases)
+    n_s, n_r, m = spec.n_s, spec.n_r, spec.m
+    state = _np_state(state)
+    w = state.deliver_time.shape[-1]
+    shapes = _window_shapes(n_s, n_r, m)
+    dense = {
+        name: np.full((n_b,) + shapes[name], fill,
+                      dtype=(bool if isinstance(fill, bool) else np.int32))
+        for name, fill in _WINDOW_FILLS.items()}
+    for b in range(n_b):
+        lo = int(bases[b])
+        live = min(w, m - lo)
+        if live > 0:
+            for name in _WINDOW_FILLS:
+                dense[name][b][..., lo:lo + live] = \
+                    getattr(state, name)[b][..., :live]
+        if lo > 0:
+            dense["recv_has"][b][..., :lo] = out_recv[b][..., :lo]
+            dense["retry"][b][..., :lo] = out_retry[b][..., :lo]
+            dense["quack_time"][b][..., :lo] = out_quack[b][..., :lo]
+            dense["deliver_time"][b][:lo] = out_deliver[b][:lo]
+            dense["known"][b][..., :lo] = True
+            dense["bcast_done"][b][..., :lo] = True
+            dense["orig_sent"][b][:lo] = True
+    return SimState(
+        **{name: jnp.asarray(a) for name, a in dense.items()},
+        last_cum=jnp.asarray(state.last_cum),
+        hq_reports=jnp.asarray(state.hq_reports),
+        ack_floor=jnp.asarray(state.ack_floor),
+        base=jnp.zeros((n_b,), dtype=jnp.int32),
+        retired_delivered=jnp.zeros((n_b,), dtype=jnp.int32),
+    )
 
 
 def _max_msg_by_round(spec: SimSpec) -> np.ndarray:
@@ -745,14 +830,26 @@ def _run_dense_batch(specs: List[SimSpec]) -> List[SimResult]:
     return out
 
 
-def _run_windowed_batch(specs: List[SimSpec]) -> List[SimResult]:
+def _run_windowed_batch(specs: List[SimSpec],
+                        commit_floors=None) -> List[SimResult]:
     """Batched windowed sweep: per-scenario failure masks AND window bases.
 
     The vmapped chunk rotates each scenario's ring buffers at its own GC
     frontier in-graph, so the whole sweep is one compilation and one
     device dispatch per chunk with O(B * W) state — windowed and batched
-    at once. Window overflow (any scenario) grows W for the whole batch;
-    dense fallback reruns the entire sweep on the dense batch kernel.
+    at once. Window overflow (checked per scenario against its own base
+    and commit floor) grows W for the whole batch; when the required
+    width would reach M the scan state migrates into the dense layout
+    (``_migrate_dense_batch``) and the same chunk loop continues —
+    partial progress is kept, never rerun.
+
+    ``commit_floors``, when given, is called as ``commit_floors(t, bases)``
+    before the chunk starting at round ``t`` (``bases`` = each scenario's
+    current retired prefix) and must return the per-scenario commit
+    floors for that chunk. The topology engine uses it to route one
+    link's retired/delivered prefix into the commit stream of chained
+    downstream links — the floors are traced inputs, so updating them
+    between chunks costs no recompilation.
     """
     spec0 = specs[0]
     n_b = len(specs)
@@ -774,22 +871,37 @@ def _run_windowed_batch(specs: List[SimSpec]) -> List[SimResult]:
         _init_state(nspec, w))
     bases = np.zeros(n_b, dtype=np.int64)
     bases_hist = [bases.copy()]
+    floors = np.full(n_b, m, dtype=np.int64)
     t = 0
     metric_parts = []
     while t < spec0.steps:
         c = min(c_full, spec0.steps - t)
-        need = int(dispatched_by[t + c - 1])
-        if need >= int(bases.min()) + w:
-            new_w = _widen_on_overflow(spec0, w, int(bases.min()), need,
-                                       t + c - 1)
+        if commit_floors is not None:
+            new_floors = np.asarray(commit_floors(t, bases.copy()),
+                                    dtype=np.int64)
+            if not np.array_equal(new_floors, floors):
+                floors = new_floors
+                fails = fails._replace(
+                    commit_floor=jnp.asarray(floors, dtype=jnp.int32))
+        # per-scenario overflow check: a scenario dispatches nothing past
+        # its commit floor, so its window need is capped by floor - 1 and
+        # measured against its OWN base (a chained link's lagging base
+        # must not force growth for messages it cannot send yet).
+        need_b = np.minimum(int(dispatched_by[t + c - 1]), floors - 1)
+        over = need_b - bases
+        b_worst = int(over.argmax())
+        if over[b_worst] >= w:
+            new_w = _widen_on_overflow(spec0, w, int(bases[b_worst]),
+                                       int(need_b[b_worst]), t + c - 1)
             if new_w is None:
-                dense = run_simulation_batch(
-                    [dataclasses.replace(s, window_slots=0, chunk_steps=0)
-                     for s in specs])
-                return [dataclasses.replace(r, spec=s)
-                        for r, s in zip(dense, specs)]
-            state = _grow_state(state, new_w)
-            w = new_w
+                state = _migrate_dense_batch(spec0, state, bases, out_quack,
+                                             out_deliver, out_retry,
+                                             out_recv)
+                bases[:] = 0
+                w = m
+            else:
+                state = _grow_state(state, new_w)
+                w = new_w
         last = t + c >= spec0.steps
         state, ms, queue = _compiled_batch_chunk(cspec, w, c, not last)(
             fails, state, jnp.int32(t))
@@ -860,6 +972,20 @@ def run_simulation_batch(specs: Sequence[SimSpec]) -> List[SimResult]:
     specs = list(specs)
     if not specs:
         return []
+    require_uniform_batch(specs)
+    if specs[0].window_slots:
+        return _run_windowed_batch(specs)
+    return _run_dense_batch(specs)
+
+
+def require_uniform_batch(specs: Sequence[SimSpec]) -> None:
+    """Raise unless the specs differ only in their failure masks.
+
+    The shared precondition of every vmapped dispatch: one compilation
+    serves the whole batch only when shapes, schedules, thresholds and
+    window config agree. Used by ``run_simulation_batch`` and the
+    topology engine (where each batch member is one link of the graph).
+    """
     nspec = _neutral(specs[0])
     win_key = (specs[0].window_slots, specs[0].chunk_steps,
                specs[0].adaptive_window)
@@ -872,6 +998,3 @@ def run_simulation_batch(specs: Sequence[SimSpec]) -> List[SimResult]:
                              "shapes, schedules, thresholds and window "
                              "config (window_slots / chunk_steps / "
                              "adaptive_window)")
-    if specs[0].window_slots:
-        return _run_windowed_batch(specs)
-    return _run_dense_batch(specs)

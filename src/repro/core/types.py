@@ -217,9 +217,12 @@ class SimConfig:
     adaptive_window: overflow semantics when a stalled GC frontier pins
                      the window while originals keep dispatching. True
                      (default): grow W adaptively (2x, migrating the scan
-                     state) and fall back to the dense kernel when W would
-                     reach M. False: raise ``ValueError`` (the strict
-                     pre-growth behaviour, useful for sizing tests).
+                     state on device); when W would reach M, migrate the
+                     scan state into the dense layout (base 0, W = M) and
+                     continue the same chunked run — partial progress is
+                     kept, never rerun. False: raise ``ValueError`` (the
+                     strict pre-growth behaviour, useful for sizing
+                     tests).
     """
 
     n_msgs: int = 256

@@ -1,0 +1,130 @@
+"""Multi-link C3B session engine on the batched windowed kernel.
+
+``run_topology`` resolves every link of a :class:`Topology` into a
+``SimSpec`` (identical modulo failure masks — enforced) and executes all
+of them through the *existing* vmapped windowed chunk kernel
+(``simulator._run_windowed_batch``): one compilation, one device
+dispatch per chunk across links, per-link window bases/frontiers and
+O(L·W) device state. There is no per-link Python loop over compiled
+calls anywhere — a link is just one lane of the batch.
+
+Chained delivery rides the commit-floor plumbing: between chunks the
+engine sets each chained link's ``commit_floor`` to its upstream link's
+retired prefix (the window base the in-graph GC rotation has advanced
+past). A retired slot is QUACKed at every sender — provably held by at
+least one honest receiver — so the floor is a *durable delivered* prefix:
+downstream clusters only ever originate entries the upstream hop cannot
+lose, which is exactly the prefix-consistency contract the oracle mirror
+(``refmirror``) and ``tests/test_topology.py`` verify bit-for-bit.
+
+Topology execution is always chunked (the floors must be able to move
+between chunks), so a stream small enough for ``window_slots="auto"`` to
+clamp to the dense kernel instead runs the windowed kernel at full width
+W = M — same observable results, chunk boundaries retained.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from ..core.simulator import (SimResult, SimSpec, build_spec,
+                              require_uniform_batch, _run_windowed_batch)
+from .graph import LinkSpec, Topology
+
+__all__ = ["LinkAccessors", "TopologyAccessors", "LinkResult",
+           "TopologyResult", "link_specs", "run_topology"]
+
+
+def link_specs(topo: Topology) -> List[SimSpec]:
+    """Per-link SimSpecs, forced onto the chunked windowed kernel."""
+    specs = [build_spec(topo.clusters[l.src], topo.clusters[l.dst],
+                        topo.sim, l.failures)
+             for l in topo.links]
+    if specs[0].window_slots == 0:
+        # commit-floor plumbing needs chunk boundaries: when the auto
+        # sizing clamps to dense (W >= M), run the windowed kernel at full
+        # width instead — bit-identical results, boundaries retained.
+        specs = [dataclasses.replace(s, window_slots=s.m,
+                                     chunk_steps=topo.sim.chunk_steps)
+                 for s in specs]
+    require_uniform_batch(specs)
+    return specs
+
+
+class LinkAccessors:
+    """Shared derived views over one link's outputs (engine AND oracle —
+    both result flavours expose ``result.deliver_time`` /
+    ``result.gc_frontiers``, so the prefix semantics cannot drift between
+    the vmapped run and its numpy mirror)."""
+
+    def delivered_mask(self) -> np.ndarray:
+        """(M,) bool — messages that reached >=1 honest dst replica."""
+        return np.asarray(self.result.deliver_time) >= 0
+
+    def delivered_prefix(self) -> int:
+        """Length of the contiguous delivered prefix (the applied log)."""
+        mask = self.delivered_mask()
+        return int(np.argmin(mask)) if not mask.all() else len(mask)
+
+    def retired_prefix(self) -> int:
+        """Final GC frontier — the durable prefix both sides may forget."""
+        return int(self.result.gc_frontiers[-1])
+
+
+class TopologyAccessors:
+    """Shared by-name addressing over a run's links (engine AND oracle)."""
+
+    def __getitem__(self, name: str):
+        return self.links[name]
+
+    def delivered_prefixes(self) -> Dict[str, int]:
+        return {n: lr.delivered_prefix() for n, lr in self.links.items()}
+
+
+@dataclasses.dataclass
+class LinkResult(LinkAccessors):
+    """One link's simulation outputs + the commit floors it ran under."""
+
+    link: LinkSpec
+    result: SimResult
+    commit_floors: np.ndarray      # (n_chunks,) floor per chunk start
+
+
+@dataclasses.dataclass
+class TopologyResult(TopologyAccessors):
+    """All links' results, addressable by link name."""
+
+    topology: Topology
+    links: Dict[str, LinkResult]
+
+
+def _floor_plan(topo: Topology) -> Dict[int, int]:
+    """link index -> upstream link index, for chained links only."""
+    idx = {l.name: i for i, l in enumerate(topo.links)}
+    return {i: idx[l.upstream] for i, l in enumerate(topo.links)
+            if l.upstream is not None}
+
+
+def run_topology(topo: Topology) -> TopologyResult:
+    """Execute every link of the graph in one vmapped windowed session."""
+    specs = link_specs(topo)
+    m = specs[0].m
+    up = _floor_plan(topo)
+    floors_hist: List[np.ndarray] = []
+
+    def commit_floors(t: int, bases: np.ndarray) -> np.ndarray:
+        floors = np.full(len(specs), m, dtype=np.int64)
+        for i, j in up.items():
+            floors[i] = bases[j]
+        floors_hist.append(floors.copy())
+        return floors
+
+    results = _run_windowed_batch(specs, commit_floors=commit_floors)
+    hist = np.stack(floors_hist)                  # (n_chunks, L)
+    links = {
+        l.name: LinkResult(link=l, result=r, commit_floors=hist[:, i])
+        for i, (l, r) in enumerate(zip(topo.links, results))}
+    return TopologyResult(topology=topo, links=links)

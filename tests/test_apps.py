@@ -1,0 +1,174 @@
+"""Paper §6 applications end-to-end: disaster recovery + reconciliation.
+
+Every fixture runs twice — on the vmapped multi-link engine and on the
+pure-numpy multi-link oracle (``use_reference=True``) — and the two
+reports must be identical: same election, same per-backup prefixes, same
+merged stores, same round counts. The app-level claims (failover picks
+the most-caught-up backup, convergence to the elected log, stores merge
+to equality) are then asserted on top.
+"""
+
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import FailureScenario, RSMConfig, SimConfig
+from repro.apps import (run_disaster_recovery, run_reconciliation,
+                        lww_merge)
+
+BFT1 = RSMConfig.bft(1)
+CFT1 = RSMConfig.cft(1)
+
+SIM = SimConfig(n_msgs=32, steps=80, window=1, phi=6, window_slots=24,
+                chunk_steps=4)
+
+LAGGY = FailureScenario(crash_r=(2, 2, -1, -1))
+BYZ = FailureScenario(byz_recv_drop=(True, False, False, False))
+
+# (name, crash_at, backup_failures) — >=3 clusters in every fixture.
+DR_FIXTURES = [
+    ("clean_no_crash", None, {}),
+    ("crash_late", 10, {"backup-1": LAGGY}),
+    ("crash_early_truncates", 3, {"backup-1": LAGGY}),
+    ("three_backups", 6, {"backup-1": LAGGY, "backup-2": BYZ}),
+]
+
+
+def _dr(name, crash_at, fails, use_reference):
+    backups = sorted({"backup-0", "backup-1"} | set(fails))
+    return run_disaster_recovery(
+        BFT1, BFT1, SIM, backups=backups, crash_at=crash_at,
+        backup_failures=fails, use_reference=use_reference)
+
+
+@pytest.mark.parametrize("name,crash_at,fails", DR_FIXTURES,
+                         ids=[f[0] for f in DR_FIXTURES])
+def test_disaster_recovery_matches_oracle(name, crash_at, fails):
+    rep = _dr(name, crash_at, fails, use_reference=False)
+    ref = _dr(name, crash_at, fails, use_reference=True)
+    assert rep.elected == ref.elected
+    assert rep.phase1_prefixes == ref.phase1_prefixes
+    assert rep.final_prefixes == ref.final_prefixes
+    assert rep.converged == ref.converged
+    assert np.array_equal(rep.recovered_log, ref.recovered_log)
+    # the underlying per-link outputs are bit-identical too
+    for lname, lr in rep.phase1.links.items():
+        rr = ref.phase1[lname]
+        for out in ("quack_time", "deliver_time", "retry", "recv_has"):
+            assert np.array_equal(np.asarray(getattr(lr.result, out)),
+                                  np.asarray(getattr(rr.result, out))), \
+                (lname, out)
+
+
+@pytest.mark.parametrize("name,crash_at,fails", DR_FIXTURES,
+                         ids=[f[0] for f in DR_FIXTURES])
+def test_disaster_recovery_semantics(name, crash_at, fails):
+    rep = _dr(name, crash_at, fails, use_reference=False)
+    # the election picked a most-caught-up backup
+    assert rep.phase1_prefixes[rep.elected] == max(
+        rep.phase1_prefixes.values())
+    # everyone converged to the elected backup's log
+    assert rep.converged
+    for b, p in rep.final_prefixes.items():
+        assert p == rep.recovered_entries, b
+    assert np.array_equal(rep.recovered_log,
+                          np.arange(rep.recovered_entries))
+
+
+def test_disaster_recovery_crash_truncates_log():
+    """An early primary crash really loses tail entries: the recovered
+    log is a strict prefix, and the catch-up stream only carries it."""
+    rep = _dr("trunc", 3, {"backup-1": LAGGY}, use_reference=False)
+    assert 0 < rep.recovered_entries < SIM.n_msgs
+    assert rep.phase2 is not None
+    assert rep.converged
+
+
+def test_disaster_recovery_laggy_backup_not_elected():
+    rep = _dr("lag", 10, {"backup-1": LAGGY}, use_reference=False)
+    assert rep.elected == "backup-0"
+    assert rep.phase1_prefixes["backup-1"] < rep.phase1_prefixes["backup-0"]
+
+
+# --- reconciliation ---------------------------------------------------------
+
+def _stores_2way():
+    return {
+        "a": {k: (k * 10, 1) for k in range(12)} | {50: (7, 5)},
+        "b": {k: (k * 10, 1) for k in range(6)} | {50: (1, 1),
+                                                   60: (9, 2)},
+    }
+
+
+def _stores_3way():
+    return {
+        "a": {k: (k, 2) for k in range(8)},
+        "b": {k: (k + 1, 1) for k in range(8)} | {20: (4, 4)},
+        "c": {30: (5, 1)},
+    }
+
+
+RECON_SIM = SimConfig(n_msgs=16, steps=60, window=1, phi=6,
+                      window_slots=16, chunk_steps=4)
+
+RECON_FIXTURES = [
+    ("two_way", _stores_2way, RECON_SIM, {}),
+    ("three_way", _stores_3way, RECON_SIM, {}),
+    ("two_way_byz_link", _stores_2way, RECON_SIM,
+     {"a->b": FailureScenario(byz_recv_drop=(True, False, False, False))}),
+    ("three_way_small_stream", _stores_3way,
+     dataclasses.replace(RECON_SIM, n_msgs=4, steps=40, window_slots=4),
+     {}),
+]
+
+
+@pytest.mark.parametrize("name,mk,sim,fails", RECON_FIXTURES,
+                         ids=[f[0] for f in RECON_FIXTURES])
+def test_reconciliation_matches_oracle(name, mk, sim, fails):
+    r = run_reconciliation(BFT1, mk(), sim, failures=fails)
+    ref = run_reconciliation(BFT1, mk(), sim, failures=fails,
+                             use_reference=True)
+    assert r.rounds == ref.rounds
+    assert r.exchanged == ref.exchanged
+    assert r.stores == ref.stores
+    assert r.converged == ref.converged
+
+
+@pytest.mark.parametrize("name,mk,sim,fails", RECON_FIXTURES,
+                         ids=[f[0] for f in RECON_FIXTURES])
+def test_reconciliation_converges_to_lww_union(name, mk, sim, fails):
+    stores = mk()
+    expect: dict = {}
+    for s in stores.values():
+        lww_merge(expect, [(k, v, ver) for k, (v, ver) in s.items()])
+    r = run_reconciliation(BFT1, stores, sim, failures=fails)
+    assert r.converged, r.rounds
+    for n, s in r.stores.items():
+        assert s == expect, n
+
+
+def test_reconciliation_small_stream_needs_multiple_rounds():
+    """A stream shorter than the delta forces chunking across rounds."""
+    stores = _stores_3way()
+    sim = dataclasses.replace(RECON_SIM, n_msgs=4, steps=40,
+                              window_slots=4)
+    r = run_reconciliation(BFT1, stores, sim)
+    assert r.rounds > 1 and r.converged
+
+
+def test_reconciliation_already_converged_is_a_noop():
+    stores = {"a": {1: (2, 3)}, "b": {1: (2, 3)}}
+    r = run_reconciliation(BFT1, stores, RECON_SIM)
+    assert r.rounds == 0 and r.converged and r.exchanged == 0
+
+
+def test_lww_merge_commutative_idempotent():
+    entries = [(1, 5, 2), (1, 9, 1), (2, 3, 3), (1, 5, 2)]
+    a: dict = {}
+    lww_merge(a, entries)
+    b: dict = {}
+    for e in reversed(entries):
+        lww_merge(b, [e])
+    assert a == b == {1: (5, 2), 2: (3, 3)}
