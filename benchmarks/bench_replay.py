@@ -1,0 +1,193 @@
+"""repro.replay benchmarks: checkpoint overhead + what-if fork sweeps.
+
+Two sections:
+
+* ``record`` — the cost of running with chunk-boundary checkpoint
+  capture vs the plain windowed run, plus the serialized trace size
+  (the checkpointing tax of turning a run into an experiment).
+* ``forks`` — fork-count x stream-length sweep: from one mid-stream
+  checkpoint, fork N crash-time variants (fork 0 = baseline, fork i
+  crashes a sender i chunk boundaries later) and execute them as ONE
+  vmapped batch — one dispatch per chunk for the whole fork set. Cold
+  vs warm wall time and the measured chunk-compile counts
+  (``chunk_traces``; warm re-forks must be 0 — the "no recompilation"
+  contract) are reported per point, with per-fork amortized cost and
+  the divergence spread across futures.
+
+  PYTHONPATH=src python -m benchmarks.bench_replay
+      [--sizes 4096,16384] [--forks 2,4,8] [--every 2]
+      [--json BENCH_replay.json]
+
+The CI fast tier runs the acceptance smoke — checkpoint -> inject ->
+4-fork batch at small shapes — via ``--sizes 1024 --forks 4``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.run import _dump_json
+from repro.core import FailureScenario, RSMConfig, SimConfig
+from repro.core.gc import snap_to_boundary
+from repro.core.simulator import build_spec, run_simulation
+from repro.replay import ForkSpec, Injection, fork_whatif, record_simulation
+
+SIZES = (4096, 16384)
+FORKS = (2, 4, 8)
+CFG = RSMConfig.bft(1)
+SEND_WINDOW = 4
+
+
+def _spec(m: int):
+    steps = m // (CFG.n * SEND_WINDOW) + 60
+    sim = SimConfig(n_msgs=m, steps=steps, window=SEND_WINDOW, phi=32,
+                    window_slots="auto", chunk_steps=32)
+    return build_spec(CFG, CFG, sim)
+
+
+def _fork_point(trace) -> int:
+    """A boundary with traffic still in flight: ~mid-dispatch."""
+    spec = trace.specs[0]
+    dispatch_rounds = spec.m // (spec.n_s * SEND_WINDOW)
+    bounds = trace.boundaries()
+    return int(bounds[np.searchsorted(bounds, dispatch_rounds // 2,
+                                      side="right") - 1])
+
+
+def _variants(trace, n_forks: int, fork_t: int):
+    """Fork 0 = baseline; fork i crashes sender 0 i-1 boundaries later
+    (the 'when does the crash hurt least' what-if sweep)."""
+    spec = trace.specs[0]
+    chunk = trace.chunk_steps
+    out = [ForkSpec("baseline")]
+    for i in range(1, n_forks):
+        t = snap_to_boundary(min(fork_t + (i - 1) * chunk,
+                                 spec.steps - 1), chunk)
+        crash = FailureScenario(
+            crash_s=(t,) + (-1,) * (spec.n_s - 1))
+        out.append(ForkSpec(f"crash{i}@{t}", [Injection(t, crash)]))
+    return out
+
+
+def record_rows(sizes, every: int):
+    rows = []
+    for m in sizes:
+        spec = _spec(m)
+        run_simulation(spec)                       # compile
+        t0 = time.time()
+        run_simulation(spec)
+        plain = time.time() - t0
+        t0 = time.time()
+        res, trace = record_simulation(spec, every=every)
+        rec = time.time() - t0
+        with tempfile.NamedTemporaryFile(suffix=".npz",
+                                         delete=False) as f:
+            path = f.name
+        try:
+            trace.save(path)
+            trace_bytes = os.path.getsize(path)
+        finally:
+            os.unlink(path)
+        rows.append({
+            "section": "record",
+            "n_msgs": m,
+            "window_slots": spec.window_slots,
+            "chunk_steps": spec.chunk_steps,
+            "every": every,
+            "n_checkpoints": len(trace.checkpoints),
+            "plain_warm_s": plain,
+            "record_warm_s": rec,
+            "record_overhead": rec / max(plain, 1e-9) - 1.0,
+            "trace_bytes": trace_bytes,
+            "complete": bool((np.asarray(res.deliver_time) >= 0).all()),
+        })
+    return rows
+
+
+def fork_rows(sizes, forks, every: int):
+    rows = []
+    for m in sizes:
+        spec = _spec(m)
+        _, trace = record_simulation(spec, every=every)
+        fork_t = _fork_point(trace)
+        for n in forks:
+            variants = _variants(trace, n, fork_t)
+            t0 = time.time()
+            cold_rep = fork_whatif(trace, fork_t, variants)
+            cold = time.time() - t0
+            t0 = time.time()
+            rep = fork_whatif(trace, fork_t, variants)
+            warm = time.time() - t0
+            stats = [f.stats["lane0"] for f in rep.forks]
+            resends = [s["resends"] for s in stats]
+            dsteps = [s["delivery_step"] for s in stats]
+            rows.append({
+                "section": "forks",
+                "n_msgs": m,
+                "forks": n,
+                "fork_step": fork_t,
+                "window_slots": spec.window_slots,
+                "cold_s": cold,
+                "warm_s": warm,
+                "warm_s_per_fork": warm / n,
+                "chunk_traces_cold": cold_rep.chunk_traces,
+                "chunk_traces_warm": rep.chunk_traces,
+                "resends_min": min(resends),
+                "resends_max": max(resends),
+                "delivery_step_min": min(dsteps),
+                "delivery_step_max": max(dsteps),
+            })
+    return rows
+
+
+def main(sizes=SIZES, forks=FORKS, every=2, json_path=None):
+    rs = record_rows(sizes, every)
+    print("# checkpoint recording overhead (windowed run + O(W) "
+          "snapshots)")
+    print("n_msgs,window_slots,n_ckpts,plain_warm_s,record_warm_s,"
+          "overhead,trace_bytes,complete")
+    for r in rs:
+        print(f"{r['n_msgs']},{r['window_slots']},{r['n_checkpoints']},"
+              f"{r['plain_warm_s']:.2f},{r['record_warm_s']:.2f},"
+              f"{r['record_overhead']:.1%},{r['trace_bytes']},"
+              f"{r['complete']}")
+    fr = fork_rows(sizes, forks, every)
+    print("# what-if fork sweep (N futures, one vmapped dispatch/chunk)")
+    print("n_msgs,forks,fork_step,cold_s,warm_s,warm_s_per_fork,"
+          "traces_cold,traces_warm,resends_spread,delivery_spread")
+    for r in fr:
+        print(f"{r['n_msgs']},{r['forks']},{r['fork_step']},"
+              f"{r['cold_s']:.2f},{r['warm_s']:.2f},"
+              f"{r['warm_s_per_fork']:.3f},{r['chunk_traces_cold']},"
+              f"{r['chunk_traces_warm']},"
+              f"{r['resends_max'] - r['resends_min']},"
+              f"{r['delivery_step_max'] - r['delivery_step_min']}")
+    rs.extend(fr)
+    if json_path:
+        _dump_json(json_path, rs)
+    return rs
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma-separated n_msgs sweep "
+                         f"(default {','.join(map(str, SIZES))})")
+    ap.add_argument("--forks", type=str, default=None,
+                    help="comma-separated fork counts "
+                         f"(default {','.join(map(str, FORKS))})")
+    ap.add_argument("--every", type=int, default=2,
+                    help="checkpoint every N chunk boundaries")
+    ap.add_argument("--json", type=str, default=None,
+                    help="dump machine-readable rows to this path")
+    args = ap.parse_args()
+    sizes = (tuple(int(x) for x in args.sizes.split(","))
+             if args.sizes else SIZES)
+    forks = (tuple(int(x) for x in args.forks.split(","))
+             if args.forks else FORKS)
+    main(sizes, forks, args.every, json_path=args.json)

@@ -93,6 +93,18 @@ def topology():
             f"{big['warm_s']:.2f}s,chain_lag={lag}rounds")
 
 
+def replay():
+    from benchmarks import bench_replay as m
+    rs = m.main(json_path="BENCH_replay.json")
+    fk = [r for r in rs if r["section"] == "forks"]
+    big = max(fk, key=lambda r: (r["forks"], r["n_msgs"]))
+    rec = [r for r in rs if r["section"] == "record"][-1]
+    return (f"{big['forks']}forks@{big['n_msgs']}msgs_warm="
+            f"{big['warm_s']:.2f}s({big['warm_s_per_fork']:.3f}s/fork,"
+            f"{big['chunk_traces_warm']}recompiles),record_overhead="
+            f"{rec['record_overhead']:.0%}")
+
+
 def crosspod():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
@@ -115,6 +127,7 @@ def main() -> None:
               ("thm1_retransmit", thm1),
               ("windowed_sim", windowed),
               ("topology_apps", topology),
+              ("replay_whatif", replay),
               ("kernels", kernels),
               ("crosspod_collectives", crosspod))
     print("== PICSOU / C3B benchmark suite ==")

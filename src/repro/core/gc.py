@@ -28,7 +28,27 @@ from .quack import weighted_quorum_prefix
 
 __all__ = ["collectable", "ack_floor_from_reports", "gc_frontier",
            "gc_frontier_device", "grow_window", "default_window_slots",
-           "resolve_window_slots"]
+           "resolve_window_slots", "chunk_boundaries", "snap_to_boundary"]
+
+
+def chunk_boundaries(steps: int, chunk_steps: int) -> np.ndarray:
+    """Rounds at which a chunked windowed run starts a compiled chunk.
+
+    These are the only rounds where the scan state is observable from the
+    host — where the GC frontier advances, commit floors move, failure
+    schedules may be swapped in, and ``repro.replay`` checkpoints can be
+    captured or resumed from.
+    """
+    if steps <= 0:
+        return np.zeros(0, dtype=np.int64)
+    return np.arange(0, steps, max(int(chunk_steps), 1), dtype=np.int64)
+
+
+def snap_to_boundary(t: int, chunk_steps: int) -> int:
+    """Largest chunk-boundary round <= ``t`` (where a mid-run event —
+    an injected crash, a replay fork — can actually take effect)."""
+    c = max(int(chunk_steps), 1)
+    return (max(int(t), 0) // c) * c
 
 
 def collectable(quacked_prefix: jnp.ndarray, m: int) -> jnp.ndarray:

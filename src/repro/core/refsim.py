@@ -44,7 +44,8 @@ from typing import List, Optional
 import numpy as np
 
 from .gc import gc_frontier
-from .simulator import (SimSpec, _max_msg_by_round, _widen_on_overflow)
+from .simulator import (SimSpec, _max_msg_by_round, _widen_on_overflow,
+                        spec_failures)
 
 __all__ = ["run_reference"]
 
@@ -117,17 +118,7 @@ class _RefMachine:
         self.orig_step = np.asarray(spec.orig_step)
         self.rs_seq = np.asarray(spec.rs_seq)
         self.rr_seq = np.asarray(spec.rr_seq)
-        self.crash_s = np.asarray(spec.crash_s)
-        self.crash_r = np.asarray(spec.crash_r)
-        self.byz_send_drop = np.asarray(spec.byz_send_drop)
-        self.byz_recv_drop = np.asarray(spec.byz_recv_drop)
-        self.byz_ack_advance = np.asarray(spec.byz_ack_advance)
-        self.byz_ack_low = np.asarray(spec.byz_ack_low)
-        self.byz_bcast_partial = np.asarray(spec.byz_bcast_partial)
-        self.honest_r = ((self.crash_r < 0)
-                         & ~(self.byz_recv_drop | self.byz_ack_low
-                             | (self.byz_ack_advance > 0)
-                             | self.byz_bcast_partial))
+        self.set_failures(spec_failures(spec))
 
         n_s, n_r, m = self.n_s, self.n_r, self.m
         self.recv_has = np.zeros((n_r, m), dtype=bool)
@@ -150,6 +141,33 @@ class _RefMachine:
         # (k, quack col, deliver, retry col, recv col) at retirement time
         self.retired_snaps: list = []
         self.retired_margin = np.inf
+
+    def set_failures(self, failures) -> None:
+        """Swap the failure masks in force from the next ``step`` on.
+
+        The oracle twin of the engine's mid-stream ``FailArrays`` swap at
+        a chunk boundary (``repro.replay`` schedule injection): crash or
+        recover replicas, open or heal a partition, change drop/lie
+        schedules. Protocol state (received sets, complaints, QUACK
+        bookkeeping) is untouched — only the masks change.
+        """
+        n_s, n_r = self.n_s, self.n_r
+
+        def tup(x, n, default):
+            return np.asarray([default] * n if x is None else list(x))
+
+        self.crash_s = tup(failures.crash_s, n_s, -1)
+        self.crash_r = tup(failures.crash_r, n_r, -1)
+        self.byz_send_drop = tup(failures.byz_send_drop, n_s, False)
+        self.byz_recv_drop = tup(failures.byz_recv_drop, n_r, False)
+        self.byz_ack_advance = tup(failures.byz_ack_advance, n_r, 0)
+        self.byz_ack_low = tup(failures.byz_ack_low, n_r, False)
+        self.byz_bcast_partial = tup(failures.byz_bcast_partial, n_r, False)
+        self.bcast_limit = int(failures.bcast_limit)
+        self.honest_r = ((self.crash_r < 0)
+                         & ~(self.byz_recv_drop | self.byz_ack_low
+                             | (self.byz_ack_advance > 0)
+                             | self.byz_bcast_partial))
 
     def quacked_at(self, l: int) -> np.ndarray:
         w = (self.known[l].astype(np.float64)
@@ -174,7 +192,7 @@ class _RefMachine:
                 continue
             for k in range(m):
                 if self.bcast_q[j, k]:
-                    targets = (range(min(spec.bcast_limit, n_r))
+                    targets = (range(min(self.bcast_limit, n_r))
                                if self.byz_bcast_partial[j] else range(n_r))
                     for i in targets:
                         if i == j:
@@ -323,7 +341,12 @@ class _RefMachine:
                                   else None))
 
 
-def run_reference(spec: SimSpec) -> RefResult:
+def run_reference(spec: SimSpec, fail_schedule=None) -> RefResult:
+    """Oracle run; ``fail_schedule(t) -> Optional[FailureScenario]`` is
+    consulted at chunk starts and swaps the failure masks in force from
+    round ``t`` on — the numpy twin of the engine's mid-stream
+    ``FailArrays`` swap, so replayed-with-injection runs can be checked
+    against a from-scratch oracle executing the merged schedule."""
     mac = _RefMachine(spec)
 
     # --- sliding-window mirror (windowed specs only) ----------------------
@@ -334,7 +357,13 @@ def run_reference(spec: SimSpec) -> RefResult:
     dispatched_by = _max_msg_by_round(spec) if win else None
 
     for t in range(spec.steps):
-        # (0) window mirror: adaptive overflow policy at chunk starts,
+        # (0) failure-schedule swap at chunk starts, exactly where the
+        # engine rebuilds its stacked FailArrays.
+        if fail_schedule is not None and t % chunk == 0:
+            new_fails = fail_schedule(t)
+            if new_fails is not None:
+                mac.set_failures(new_fails)
+        # window mirror: adaptive overflow policy at chunk starts,
         # exactly where the jax windowed path checks before a chunk.
         if win and t % chunk == 0:
             chunk_end = min(t + chunk, spec.steps) - 1

@@ -73,12 +73,16 @@ import numpy as np
 from . import scheduler as sched
 from .gc import gc_frontier_device, grow_window, resolve_window_slots
 from .quack import claim_bitmask, missing_below_horizon, weighted_quorum_prefix
+from .snapshot import (WINDOW_FILLS as _WINDOW_FILLS, device_state,
+                       host_state, pad_window, window_shapes
+                       as _window_shapes)
 from .types import (COUNTER_BYTES, MAC_BYTES, SEQNO_BYTES, FailureScenario,
                     NetworkModel, RSMConfig, SimConfig, lcm_scale_factors)
 
 __all__ = ["SimSpec", "SimResult", "FailArrays", "build_spec",
            "run_simulation", "run_simulation_batch",
-           "require_uniform_batch"]
+           "require_uniform_batch", "ChunkCheckpoint", "WindowGrowthEvent",
+           "spec_failures", "spec_with_failures", "chunk_trace_count"]
 
 NEVER = jnp.int32(-1)
 _NEVER_STEP = 2 ** 30     # orig_step pad for window slots beyond the stream
@@ -198,6 +202,67 @@ class ChunkQueue(NamedTuple):
     count: jnp.ndarray         # () int32 — slots retired by this rotation
 
 
+class ChunkCheckpoint(NamedTuple):
+    """Host-side snapshot of a batched windowed run at a chunk boundary.
+
+    Captured by ``_run_windowed_batch`` (when given a ``recorder``) right
+    before dispatching the chunk that starts at round ``t``, and accepted
+    back as its ``resume`` argument: resuming from a checkpoint replays
+    the exact remaining chunk stream — same compiled chunk program (the
+    batch shape and window width are unchanged, so nothing recompiles),
+    same overflow/growth decisions, same drains — and is bit-identical
+    to the original run when the failure schedule is unchanged. All
+    leaves are host-side numpy (int32/bool), so a device round-trip is
+    exact and the tuple serializes losslessly (``repro.replay``).
+    """
+
+    t: int                       # next round to execute
+    window_slots: int            # window width in force entering the chunk
+    bases: np.ndarray            # (B,) per-lane window base
+    state: SimState              # batched scan state, numpy leaves
+    fails: FailArrays            # masks in force (numpy leaves, stacked)
+    floors: np.ndarray           # (B,) commit floors in force
+    out_quack: np.ndarray        # (B, n_s, M) drained retired prefix
+    out_deliver: np.ndarray      # (B, M)
+    out_retry: np.ndarray        # (B, n_s, M)
+    out_recv: np.ndarray         # (B, n_r, M)
+    # per-chunk (B, c) metric blocks of the rounds already run; shared by
+    # reference with the engine loop (capture is O(1), not O(t)) — use
+    # ``metrics()`` for the concatenated (B, t) view.
+    metric_parts: Tuple[StepMetrics, ...]
+    bases_hist: np.ndarray       # (n_boundaries_so_far, B)
+    growth_events: Tuple[WindowGrowthEvent, ...]
+
+    def metrics(self) -> StepMetrics:
+        """Concatenated (B, t) per-round metrics up to this checkpoint."""
+        return _concat_metrics(len(self.bases), list(self.metric_parts))
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowGrowthEvent:
+    """One adaptive-window growth decision, attributed to its cause.
+
+    In a batched run the whole batch shares one window width, so a single
+    frontier-stalled scenario forces growth for every lane — ``scenario``
+    records *which* lane overflowed (batch index) and ``step`` the round
+    whose dispatch would have outrun the window, instead of the batch
+    silently growing W.  ``new_w == m`` with ``dense_migration`` set means
+    the run migrated into the dense layout rather than doubling again.
+    """
+
+    step: int                # round whose dispatch overflowed the window
+    scenario: int            # batch lane that forced the growth
+    need: int                # highest in-flight seqno at that round
+    old_w: int
+    new_w: int
+    dense_migration: bool = False
+    # what-if fork batches re-attribute tiled lane indices back to
+    # (fork, lane) so consumers never see a mixed index space; None for
+    # plain (un-forked) runs and for growths inherited from the shared
+    # pre-fork prefix.
+    fork: Optional[int] = None
+
+
 @dataclasses.dataclass
 class SimResult:
     spec: SimSpec
@@ -212,6 +277,11 @@ class SimResult:
     # window width the run ended with (== m for dense / dense-fallback
     # runs; > spec.window_slots when adaptive growth kicked in).
     final_window_slots: Optional[int] = None
+    # adaptive growth provenance: every growth/dense-migration decision
+    # the run (or its whole batch — events are shared batch-wide, the
+    # ``scenario`` field says which lane forced each) took. Empty when
+    # the window never grew.
+    window_growth_events: Tuple[WindowGrowthEvent, ...] = ()
 
     # --- derived -------------------------------------------------------
     def completion_step(self) -> int:
@@ -290,11 +360,6 @@ def build_spec(sender: RSMConfig, receiver: RSMConfig,
         rs_seq = sched.dss_sequence(st_s * psi_s, q_s, q_s)
         rr_seq = sched.dss_sequence(st_r * psi_r, q_r, q_r)
 
-    def tup(x, n, default):
-        if x is None:
-            return tuple([default] * n)
-        return tuple(x)
-
     w_slots = resolve_window_slots(
         sim.window_slots, n_s=n_s, n_r=n_r, send_window=sim.window,
         phi=sim.phi, chunk_steps=sim.chunk_steps, m=m)
@@ -311,6 +376,22 @@ def build_spec(sender: RSMConfig, receiver: RSMConfig,
         orig_step=tuple(int(x) for x in orig_step),
         rs_seq=tuple(int(x) for x in rs_seq),
         rr_seq=tuple(int(x) for x in rr_seq),
+        **_failure_fields(failures, n_s, n_r),
+        window_slots=w_slots,
+        chunk_steps=sim.chunk_steps if w_slots else 0,
+        adaptive_window=sim.adaptive_window,
+    )
+
+
+def _failure_fields(failures: FailureScenario, n_s: int, n_r: int) -> dict:
+    """Resolve a FailureScenario into the SimSpec mask fields."""
+
+    def tup(x, n, default):
+        if x is None:
+            return tuple([default] * n)
+        return tuple(x)
+
+    return dict(
         crash_s=tup(failures.crash_s, n_s, -1),
         crash_r=tup(failures.crash_r, n_r, -1),
         byz_send_drop=tup(failures.byz_send_drop, n_s, False),
@@ -319,10 +400,31 @@ def build_spec(sender: RSMConfig, receiver: RSMConfig,
         byz_ack_low=tup(failures.byz_ack_low, n_r, False),
         byz_bcast_partial=tup(failures.byz_bcast_partial, n_r, False),
         bcast_limit=failures.bcast_limit,
-        window_slots=w_slots,
-        chunk_steps=sim.chunk_steps if w_slots else 0,
-        adaptive_window=sim.adaptive_window,
     )
+
+
+def spec_with_failures(spec: SimSpec, failures: FailureScenario) -> SimSpec:
+    """Overlay a FailureScenario's masks onto an existing spec.
+
+    Everything structural (schedules, thresholds, window config) is kept,
+    so the result batches/replays against the original spec's compiled
+    chunk — this is how ``repro.replay`` expresses a mid-run schedule
+    edit as a full per-lane spec for the stacked ``FailArrays`` rebuild.
+    """
+    return dataclasses.replace(
+        spec, **_failure_fields(failures, spec.n_s, spec.n_r))
+
+
+def spec_failures(spec: SimSpec) -> FailureScenario:
+    """Extract the failure masks of a spec as a FailureScenario."""
+    return FailureScenario(
+        crash_s=spec.crash_s, crash_r=spec.crash_r,
+        byz_send_drop=spec.byz_send_drop,
+        byz_recv_drop=spec.byz_recv_drop,
+        byz_ack_advance=spec.byz_ack_advance,
+        byz_ack_low=spec.byz_ack_low,
+        byz_bcast_partial=spec.byz_bcast_partial,
+        bcast_limit=spec.bcast_limit)
 
 
 def _fail_arrays(spec: SimSpec) -> FailArrays:
@@ -525,21 +627,10 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
     return step
 
 
-# window-indexed SimState fields -> neutral fill for a fresh slot. The
-# single source of truth for _init_state, _rotate_device and _grow_state,
-# so the three constructors cannot drift when a field is added (a wrong
-# tail fill would compile fine and corrupt only long/adversarial runs).
-_WINDOW_FILLS = dict(recv_has=False, bcast_q=False, bcast_done=False,
-                     orig_sent=False, known=False, complaint=False,
-                     repeat_c=False, retry=0, quack_time=-1, deliver_time=-1)
-
-
-def _window_shapes(n_s: int, n_r: int, w: int) -> dict:
-    """Window-indexed SimState field -> shape at window width ``w``."""
-    return dict(recv_has=(n_r, w), bcast_q=(n_r, w), bcast_done=(n_r, w),
-                orig_sent=(w,), known=(n_s, n_r, w),
-                complaint=(n_s, n_r, w), repeat_c=(n_s, n_r, w),
-                retry=(n_s, w), quack_time=(n_s, w), deliver_time=(w,))
+# the window-layout invariants (_WINDOW_FILLS / _window_shapes) and the
+# host<->device / width-migration helpers live in core/snapshot.py — one
+# shared home for the simulator, the dense-migration path and the
+# repro.replay checkpoint machinery.
 
 
 def _init_state(spec: SimSpec, w: int) -> SimState:
@@ -615,6 +706,19 @@ def _rotate_device(s: SimState, f, w: int) -> SimState:
                            + retired_deliv).astype(jnp.int32))
 
 
+# number of times any windowed chunk program has been *traced* (i.e.
+# staged for compilation). Warm dispatches do not bump it, so the delta
+# across a replay / what-if fork batch is exactly the number of fresh
+# compilations it cost — the observable behind the "reusing the already-
+# compiled windowed chunk" contract (tests/test_replay.py, bench_replay).
+_CHUNK_TRACES = [0]
+
+
+def chunk_trace_count() -> int:
+    """How many windowed chunk tracings (compilations) happened so far."""
+    return _CHUNK_TRACES[0]
+
+
 def _build_chunk(nspec: SimSpec, w_slots: int, chunk_len: int, rotate: bool):
     """Windowed chunk: ``chunk_len`` rounds + in-graph GC rotation.
 
@@ -636,6 +740,7 @@ def _build_chunk(nspec: SimSpec, w_slots: int, chunk_len: int, rotate: bool):
     stakes_r32 = jnp.asarray(nspec.stakes_r, dtype=jnp.float32)
 
     def chunk(fail: FailArrays, state: SimState, t0):
+        _CHUNK_TRACES[0] += 1       # body runs only while tracing
         base0 = state.base
         sl = lambda a: jax.lax.dynamic_slice(a, (base0,), (w_slots,))
         sched_w = (sl(osend_p), sl(orecv_p), sl(ostep_p))
@@ -673,27 +778,10 @@ def _compiled_batch_chunk(nspec: SimSpec, w_slots: int, chunk_len: int,
                             in_axes=(0, 0, None)))
 
 
-def _np_state(state: SimState) -> SimState:
-    return jax.tree_util.tree_map(np.asarray, state)
-
-
-def _grow_state(state: SimState, new_w: int) -> SimState:
-    """Migrate scan state to a wider window (adaptive growth), on device.
-
-    Window-indexed arrays gain fresh-fill tail slots; per-replica state,
-    ``base`` and leading (batch) axes are untouched, so the migrated state
-    resumes the identical protocol at the wider width.
-    """
-    w = state.deliver_time.shape[-1]
-
-    def pad(a, fill):
-        a = jnp.asarray(a)
-        ext = jnp.full(a.shape[:-1] + (new_w - w,), fill, dtype=a.dtype)
-        return jnp.concatenate([a, ext], axis=-1)
-
-    return state._replace(
-        **{name: pad(getattr(state, name), fill)
-           for name, fill in _WINDOW_FILLS.items()})
+# host materialization / width migration are the shared snapshot
+# utilities; thin aliases keep the simulator's internal vocabulary.
+_np_state = host_state
+_grow_state = pad_window
 
 
 def _widen_on_overflow(spec: SimSpec, w: int, base: int, need: int,
@@ -830,8 +918,21 @@ def _run_dense_batch(specs: List[SimSpec]) -> List[SimResult]:
     return out
 
 
-def _run_windowed_batch(specs: List[SimSpec],
-                        commit_floors=None) -> List[SimResult]:
+def _concat_metrics(n_b: int, metric_parts) -> StepMetrics:
+    """Concatenate per-chunk (B, c) metric parts into (B, t) arrays."""
+    if not metric_parts:
+        return StepMetrics(*(np.zeros((n_b, 0), dtype=np.int32)
+                             for _ in StepMetrics._fields))
+    return StepMetrics(*(
+        np.concatenate([np.asarray(getattr(p, name)) for p in metric_parts],
+                       axis=-1)
+        for name in StepMetrics._fields))
+
+
+def _run_windowed_batch(specs: List[SimSpec], commit_floors=None, *,
+                        fail_schedule=None, recorder=None,
+                        resume: Optional[ChunkCheckpoint] = None,
+                        ) -> List[SimResult]:
     """Batched windowed sweep: per-scenario failure masks AND window bases.
 
     The vmapped chunk rotates each scenario's ring buffers at its own GC
@@ -841,7 +942,10 @@ def _run_windowed_batch(specs: List[SimSpec],
     and commit floor) grows W for the whole batch; when the required
     width would reach M the scan state migrates into the dense layout
     (``_migrate_dense_batch``) and the same chunk loop continues —
-    partial progress is kept, never rerun.
+    partial progress is kept, never rerun. Every growth decision is
+    recorded (``SimResult.window_growth_events``) with the lane that
+    forced it and the overflow round, instead of the batch silently
+    growing W.
 
     ``commit_floors``, when given, is called as ``commit_floors(t, bases)``
     before the chunk starting at round ``t`` (``bases`` = each scenario's
@@ -850,32 +954,89 @@ def _run_windowed_batch(specs: List[SimSpec],
     link's retired/delivered prefix into the commit stream of chained
     downstream links — the floors are traced inputs, so updating them
     between chunks costs no recompilation.
+
+    ``fail_schedule``, when given, is called as ``fail_schedule(t)`` at
+    the top of each chunk; returning a list of specs (same structure as
+    ``specs``, differing only in failure masks) swaps the stacked
+    ``FailArrays`` in force from round ``t`` onward — a mid-stream
+    crash/heal/drop-schedule edit. The masks are traced inputs, so a
+    swap costs no recompilation; returning ``None`` keeps the masks.
+
+    ``recorder`` (an object with ``wants(t) -> bool`` and
+    ``capture(ChunkCheckpoint)``) captures chunk-boundary checkpoints;
+    ``resume`` restarts the loop from a previously captured checkpoint —
+    the replay subsystem's entry points (``repro.replay``).
     """
     spec0 = specs[0]
     n_b = len(specs)
     nspec = _neutral(spec0)
     cspec = dataclasses.replace(nspec, steps=0)
-    fails = _stacked_fails(specs)
-    w, c_full = spec0.window_slots, max(spec0.chunk_steps, 1)
     n_s, n_r, m = spec0.n_s, spec0.n_r, spec0.m
-
-    out_quack = np.full((n_b, n_s, m), -1, dtype=np.int32)
-    out_deliver = np.full((n_b, m), -1, dtype=np.int32)
-    out_retry = np.zeros((n_b, n_s, m), dtype=np.int32)
-    out_recv = np.zeros((n_b, n_r, m), dtype=bool)
+    c_full = max(spec0.chunk_steps, 1)
 
     dispatched_by = _max_msg_by_round(spec0)
 
-    state = jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x, (n_b,) + x.shape),
-        _init_state(nspec, w))
-    bases = np.zeros(n_b, dtype=np.int64)
-    bases_hist = [bases.copy()]
-    floors = np.full(n_b, m, dtype=np.int64)
-    t = 0
-    metric_parts = []
+    if resume is None:
+        w = spec0.window_slots
+        fails = _stacked_fails(specs)
+        out_quack = np.full((n_b, n_s, m), -1, dtype=np.int32)
+        out_deliver = np.full((n_b, m), -1, dtype=np.int32)
+        out_retry = np.zeros((n_b, n_s, m), dtype=np.int32)
+        out_recv = np.zeros((n_b, n_r, m), dtype=bool)
+        state = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_b,) + x.shape),
+            _init_state(nspec, w))
+        bases = np.zeros(n_b, dtype=np.int64)
+        bases_hist = [bases.copy()]
+        floors = np.full(n_b, m, dtype=np.int64)
+        t = 0
+        metric_parts = []
+        growth_events: List[WindowGrowthEvent] = []
+    else:
+        if len(resume.bases) != n_b:
+            raise ValueError(
+                f"resume checkpoint has {len(resume.bases)} lanes, specs "
+                f"describe {n_b}")
+        w = int(resume.window_slots)
+        fails = FailArrays(*(jnp.asarray(x) for x in resume.fails))
+        out_quack = np.array(resume.out_quack, dtype=np.int32)
+        out_deliver = np.array(resume.out_deliver, dtype=np.int32)
+        out_retry = np.array(resume.out_retry, dtype=np.int32)
+        out_recv = np.array(resume.out_recv, dtype=bool)
+        state = device_state(resume.state)
+        bases = np.array(resume.bases, dtype=np.int64)
+        bases_hist = [np.array(r, dtype=np.int64)
+                      for r in resume.bases_hist]
+        floors = np.array(resume.floors, dtype=np.int64)
+        t = int(resume.t)
+        metric_parts = [p for p in resume.metric_parts
+                        if np.asarray(p.acks).shape[-1]]
+        growth_events = list(resume.growth_events)
+
     while t < spec0.steps:
         c = min(c_full, spec0.steps - t)
+        if fail_schedule is not None:
+            new_specs = fail_schedule(t)
+            if new_specs is not None:
+                new_specs = list(new_specs)
+                if (len(new_specs) != n_b
+                        or any(_neutral(s) != nspec for s in new_specs)):
+                    raise ValueError(
+                        "fail_schedule must return one spec per lane, "
+                        "differing from the originals only in failure "
+                        "masks")
+                fails = _stacked_fails(new_specs)._replace(
+                    commit_floor=jnp.asarray(floors, dtype=jnp.int32))
+        if recorder is not None and recorder.wants(t):
+            recorder.capture(ChunkCheckpoint(
+                t=t, window_slots=w, bases=bases.copy(),
+                state=_np_state(state), fails=_np_state(fails),
+                floors=floors.copy(),
+                out_quack=out_quack.copy(), out_deliver=out_deliver.copy(),
+                out_retry=out_retry.copy(), out_recv=out_recv.copy(),
+                metric_parts=tuple(metric_parts),
+                bases_hist=np.stack(bases_hist),
+                growth_events=tuple(growth_events)))
         if commit_floors is not None:
             new_floors = np.asarray(commit_floors(t, bases.copy()),
                                     dtype=np.int64)
@@ -893,6 +1054,11 @@ def _run_windowed_batch(specs: List[SimSpec],
         if over[b_worst] >= w:
             new_w = _widen_on_overflow(spec0, w, int(bases[b_worst]),
                                        int(need_b[b_worst]), t + c - 1)
+            growth_events.append(WindowGrowthEvent(
+                step=t + c - 1, scenario=b_worst,
+                need=int(need_b[b_worst]), old_w=w,
+                new_w=m if new_w is None else new_w,
+                dense_migration=new_w is None))
             if new_w is None:
                 state = _migrate_dense_batch(spec0, state, bases, out_quack,
                                              out_deliver, out_retry,
@@ -941,17 +1107,19 @@ def _run_windowed_batch(specs: List[SimSpec],
             out_recv[b, :, lo:lo + live] = final.recv_has[b, :, :live]
 
     traj = np.stack(bases_hist)                     # (n_boundaries, n_b)
+    all_metrics = _concat_metrics(n_b, metric_parts)
+    events = tuple(growth_events)
     out = []
     for b, spec in enumerate(specs):
-        metrics = StepMetrics(*(
-            np.concatenate([getattr(p, name)[b] for p in metric_parts])
-            for name in StepMetrics._fields))
+        metrics = StepMetrics(*(getattr(all_metrics, name)[b]
+                                for name in StepMetrics._fields))
         out.append(SimResult(
             spec=spec, metrics=metrics,
             quack_time=out_quack[b], deliver_time=out_deliver[b],
             retry=out_retry[b], recv_has=out_recv[b],
             gc_frontiers=traj[:, b].astype(np.int64),
             final_window_slots=w,
+            window_growth_events=events,
         ))
     return out
 

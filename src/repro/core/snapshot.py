@@ -1,0 +1,89 @@
+"""Shared host<->device materialization of windowed scan state.
+
+One home for the window-layout invariants that used to be spread over
+private helpers in ``core/simulator.py`` (``_np_state`` / grow-padding /
+dense-migration padding): which ``SimState`` fields are window-indexed,
+what a *fresh* (never-touched) slot looks like, and how to move a whole
+state tree between host (numpy) and device (jnp) or between window
+widths. ``repro.replay`` uses the same utilities to capture chunk-
+boundary checkpoints, serialize them (``state_to_arrays`` /
+``state_from_arrays``) and push them back onto the device for resume —
+so a checkpointed state can never drift from what the simulator
+actually carries.
+
+Everything here operates structurally on ``NamedTuple`` state trees
+(``_fields`` / ``_replace``), so this module depends on neither the
+simulator nor jax tracing internals.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["WINDOW_FILLS", "window_shapes", "host_state", "device_state",
+           "pad_window", "state_to_arrays", "state_from_arrays"]
+
+# window-indexed SimState fields -> neutral fill for a fresh slot. The
+# single source of truth for state init, in-graph rotation refills,
+# adaptive growth and dense-layout migration, so the constructors cannot
+# drift when a field is added (a wrong tail fill would compile fine and
+# corrupt only long/adversarial runs).
+WINDOW_FILLS = dict(recv_has=False, bcast_q=False, bcast_done=False,
+                    orig_sent=False, known=False, complaint=False,
+                    repeat_c=False, retry=0, quack_time=-1, deliver_time=-1)
+
+
+def window_shapes(n_s: int, n_r: int, w: int) -> dict:
+    """Window-indexed SimState field -> shape at window width ``w``."""
+    return dict(recv_has=(n_r, w), bcast_q=(n_r, w), bcast_done=(n_r, w),
+                orig_sent=(w,), known=(n_s, n_r, w),
+                complaint=(n_s, n_r, w), repeat_c=(n_s, n_r, w),
+                retry=(n_s, w), quack_time=(n_s, w), deliver_time=(w,))
+
+
+def host_state(state):
+    """Materialize a (possibly device-resident) state tree as numpy."""
+    return jax.tree_util.tree_map(np.asarray, state)
+
+
+def device_state(state):
+    """Push a host-side state tree back onto the device (exact: every
+    leaf is int32/bool, so the round-trip is bit-preserving)."""
+    return jax.tree_util.tree_map(jnp.asarray, state)
+
+
+def pad_window(state, new_w: int):
+    """Migrate scan state to a wider window, preserving live columns.
+
+    Window-indexed arrays gain fresh-fill tail slots; per-replica state,
+    ``base`` and leading (batch) axes are untouched, so the migrated
+    state resumes the identical protocol at the wider width. Works on
+    host (numpy) and device (jnp) trees alike.
+    """
+    w = state.deliver_time.shape[-1]
+
+    def pad(a, fill):
+        a = jnp.asarray(a)
+        ext = jnp.full(a.shape[:-1] + (new_w - w,), fill, dtype=a.dtype)
+        return jnp.concatenate([a, ext], axis=-1)
+
+    return state._replace(
+        **{name: pad(getattr(state, name), fill)
+           for name, fill in WINDOW_FILLS.items()})
+
+
+def state_to_arrays(state, prefix: str = "") -> Dict[str, np.ndarray]:
+    """Flatten a state NamedTuple into named numpy arrays (npz-ready)."""
+    return {f"{prefix}{name}": np.asarray(getattr(state, name))
+            for name in state._fields}
+
+
+def state_from_arrays(cls, arrays: Dict[str, np.ndarray],
+                      prefix: str = ""):
+    """Rebuild a state NamedTuple of type ``cls`` from named arrays."""
+    return cls(**{name: np.asarray(arrays[f"{prefix}{name}"])
+                  for name in cls._fields})

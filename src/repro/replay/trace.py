@@ -1,0 +1,251 @@
+"""RunTrace — chunk-boundary checkpoints with a stable npz serialization.
+
+A :class:`RunTrace` is the replayable record of one engine run: the
+per-lane structural specs, the topology (for multi-link runs), the
+lane->upstream commit-floor plan, and a list of
+:class:`~repro.core.simulator.ChunkCheckpoint` snapshots captured at
+chunk boundaries. Every checkpoint leaf is host-side numpy (int32/bool),
+so ``save``/``load`` round-trips bit-exactly: a trace loaded from disk
+resumes into the very same chunk stream as one captured in memory.
+
+:class:`Injection` is one schedule edit — a full
+:class:`~repro.core.FailureScenario` replacement for a lane taking
+effect at a chunk-boundary round. Edits compose into a failure
+*timeline*; ``repro.replay.replay`` turns a timeline into the engine's
+``fail_schedule`` callback (and the oracle's numpy twin).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.simulator import (ChunkCheckpoint, FailArrays, SimResult,
+                              SimSpec, SimState, StepMetrics,
+                              WindowGrowthEvent)
+from ..core.snapshot import state_from_arrays, state_to_arrays
+from ..core.types import FailureScenario, RSMConfig, SimConfig
+from ..topology.graph import LinkSpec, Topology
+
+__all__ = ["Injection", "TraceRecorder", "RunTrace"]
+
+_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Injection:
+    """One schedule edit: from round ``at_step`` (a chunk boundary) on,
+    the lane's failure masks are replaced by ``failures`` — crash or
+    recover a replica, open or heal a partition, change drop schedules.
+    ``at_step`` must be a multiple of the run's ``chunk_steps``; masks
+    are traced inputs, so applying an edit never recompiles anything."""
+
+    at_step: int
+    failures: FailureScenario
+
+
+class TraceRecorder:
+    """Checkpoint sink handed to the engine (``wants``/``capture``).
+
+    Captures every ``every``-th chunk boundary (the boundary at round 0
+    always qualifies, so a trace can replay from the very start). The
+    capture cost — one O(B·W) device->host state materialization — is
+    only paid at boundaries ``wants`` accepts.
+    """
+
+    def __init__(self, chunk_steps: int, every: int = 1):
+        if every < 1:
+            raise ValueError("every must be >= 1")
+        self.chunk = max(int(chunk_steps), 1)
+        self.every = int(every)
+        self.checkpoints: List[ChunkCheckpoint] = []
+
+    def wants(self, t: int) -> bool:
+        return (t // self.chunk) % self.every == 0
+
+    def capture(self, ckpt: ChunkCheckpoint) -> None:
+        self.checkpoints.append(ckpt)
+
+
+@dataclasses.dataclass
+class RunTrace:
+    """Replayable record of one chunked windowed run.
+
+    kind:        "link" (single spec or scenario batch) | "topology".
+    specs:       per-lane structural specs, masks = the original run's
+                 static failure scenario (the base every timeline edit
+                 overlays onto).
+    lane_names:  one name per batch lane (link names for topologies).
+    floor_plan:  lane -> upstream lane (chained commit gating); empty
+                 for standalone links and fanouts.
+    checkpoints: chunk-boundary snapshots, ascending ``t``.
+    results:     the original run's per-lane outputs (in-memory traces
+                 only — not serialized; baselines are re-derivable by an
+                 unchanged replay).
+    topology:    the graph (topology traces), serialized with the trace.
+    """
+
+    kind: str
+    specs: List[SimSpec]
+    lane_names: List[str]
+    floor_plan: Dict[int, int]
+    checkpoints: List[ChunkCheckpoint]
+    results: Optional[List[SimResult]] = None
+    topology: Optional[Topology] = None
+
+    # --- addressing ------------------------------------------------------
+    @property
+    def n_lanes(self) -> int:
+        return len(self.specs)
+
+    @property
+    def chunk_steps(self) -> int:
+        return max(self.specs[0].chunk_steps, 1)
+
+    @property
+    def steps(self) -> int:
+        return self.specs[0].steps
+
+    def boundaries(self) -> np.ndarray:
+        """Rounds at which this trace holds a checkpoint."""
+        return np.asarray([c.t for c in self.checkpoints], dtype=np.int64)
+
+    def checkpoint_at(self, t: int) -> ChunkCheckpoint:
+        for c in self.checkpoints:
+            if c.t == t:
+                return c
+        raise KeyError(
+            f"no checkpoint at round {t}; recorded boundaries: "
+            f"{self.boundaries().tolist()}")
+
+    def last_checkpoint_before(self, t: int) -> ChunkCheckpoint:
+        """Latest checkpoint with ``ckpt.t <= t`` (e.g. the pre-crash
+        snapshot for an event scheduled at round ``t``)."""
+        best = None
+        for c in self.checkpoints:
+            if c.t <= t and (best is None or c.t > best.t):
+                best = c
+        if best is None:
+            raise KeyError(f"no checkpoint at or before round {t}")
+        return best
+
+    # --- serialization ---------------------------------------------------
+    def save(self, path: str) -> None:
+        """Serialize to one compressed npz (stable, numpy-only form)."""
+        meta = {
+            "version": _FORMAT_VERSION,
+            "kind": self.kind,
+            "lane_names": list(self.lane_names),
+            "floor_plan": {str(k): int(v)
+                           for k, v in self.floor_plan.items()},
+            "specs": [dataclasses.asdict(s) for s in self.specs],
+            "topology": (_topology_to_json(self.topology)
+                         if self.topology is not None else None),
+            "checkpoints": [
+                {"t": int(c.t), "window_slots": int(c.window_slots),
+                 "growth_events": [dataclasses.asdict(e)
+                                   for e in c.growth_events]}
+                for c in self.checkpoints],
+        }
+        arrays: Dict[str, np.ndarray] = {}
+        for i, c in enumerate(self.checkpoints):
+            p = f"c{i}."
+            arrays[p + "bases"] = np.asarray(c.bases)
+            arrays[p + "floors"] = np.asarray(c.floors)
+            arrays[p + "bases_hist"] = np.asarray(c.bases_hist)
+            arrays[p + "out_quack"] = np.asarray(c.out_quack)
+            arrays[p + "out_deliver"] = np.asarray(c.out_deliver)
+            arrays[p + "out_retry"] = np.asarray(c.out_retry)
+            arrays[p + "out_recv"] = np.asarray(c.out_recv)
+            arrays.update(state_to_arrays(c.state, p + "state."))
+            arrays.update(state_to_arrays(c.fails, p + "fails."))
+            # per-chunk metric blocks flatten to the (B, t) view on disk
+            arrays.update(state_to_arrays(c.metrics(), p + "metrics."))
+        np.savez_compressed(path, meta=np.asarray(json.dumps(meta)),
+                            **arrays)
+
+    @classmethod
+    def load(cls, path: str) -> "RunTrace":
+        with np.load(path, allow_pickle=False) as d:
+            meta = json.loads(str(d["meta"]))
+            if meta["version"] != _FORMAT_VERSION:
+                raise ValueError(
+                    f"trace format v{meta['version']} != "
+                    f"v{_FORMAT_VERSION}")
+            checkpoints = []
+            for i, cm in enumerate(meta["checkpoints"]):
+                p = f"c{i}."
+                checkpoints.append(ChunkCheckpoint(
+                    t=int(cm["t"]),
+                    window_slots=int(cm["window_slots"]),
+                    bases=d[p + "bases"],
+                    state=state_from_arrays(SimState, d, p + "state."),
+                    fails=state_from_arrays(FailArrays, d, p + "fails."),
+                    floors=d[p + "floors"],
+                    out_quack=d[p + "out_quack"],
+                    out_deliver=d[p + "out_deliver"],
+                    out_retry=d[p + "out_retry"],
+                    out_recv=d[p + "out_recv"],
+                    metric_parts=(state_from_arrays(StepMetrics, d,
+                                                    p + "metrics."),),
+                    bases_hist=d[p + "bases_hist"],
+                    growth_events=tuple(
+                        WindowGrowthEvent(**e)
+                        for e in cm["growth_events"]),
+                ))
+        topo = (_topology_from_json(meta["topology"])
+                if meta["topology"] is not None else None)
+        return cls(
+            kind=meta["kind"],
+            specs=[_spec_from_json(s) for s in meta["specs"]],
+            lane_names=list(meta["lane_names"]),
+            floor_plan={int(k): int(v)
+                        for k, v in meta["floor_plan"].items()},
+            checkpoints=checkpoints,
+            results=None,
+            topology=topo,
+        )
+
+
+# --- dataclass <-> json (tuples come back from JSON as lists) -------------
+
+def _retuple(cls, d: dict):
+    fields = {}
+    for f in dataclasses.fields(cls):
+        v = d[f.name]
+        fields[f.name] = tuple(v) if isinstance(v, list) else v
+    return cls(**fields)
+
+
+def _spec_from_json(d: dict) -> SimSpec:
+    return _retuple(SimSpec, d)
+
+
+def _failures_from_json(d: dict) -> FailureScenario:
+    return _retuple(FailureScenario, d)
+
+
+def _topology_to_json(topo: Topology) -> dict:
+    return {
+        "clusters": {n: dataclasses.asdict(c)
+                     for n, c in topo.clusters.items()},
+        "links": [dataclasses.asdict(l) for l in topo.links],
+        "sim": dataclasses.asdict(topo.sim),
+    }
+
+
+def _topology_from_json(d: dict) -> Topology:
+    links = []
+    for ld in d["links"]:
+        ld = dict(ld)
+        ld["failures"] = _failures_from_json(ld["failures"])
+        links.append(LinkSpec(**ld))
+    return Topology(
+        clusters={n: _retuple(RSMConfig, c)
+                  for n, c in d["clusters"].items()},
+        links=tuple(links),
+        sim=SimConfig(**d["sim"]),
+    )

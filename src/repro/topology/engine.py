@@ -35,7 +35,7 @@ from ..core.simulator import (SimResult, SimSpec, build_spec,
 from .graph import LinkSpec, Topology
 
 __all__ = ["LinkAccessors", "TopologyAccessors", "LinkResult",
-           "TopologyResult", "link_specs", "run_topology"]
+           "TopologyResult", "link_specs", "plan_floors", "run_topology"]
 
 
 def link_specs(topo: Topology) -> List[SimSpec]:
@@ -108,21 +108,50 @@ def _floor_plan(topo: Topology) -> Dict[int, int]:
             if l.upstream is not None}
 
 
-def run_topology(topo: Topology) -> TopologyResult:
-    """Execute every link of the graph in one vmapped windowed session."""
+def plan_floors(plan: Dict[int, int], n_lanes: int, m: int,
+                bases) -> np.ndarray:
+    """Commit floors for one chunk from the lanes' retired prefixes.
+
+    ``plan`` maps lane -> upstream lane; unchained lanes are fully
+    committed (floor = m). Shared by the engine, the numpy mirror and the
+    replay/what-if drivers (which tile the plan across fork blocks), so
+    the chained-delivery rule has exactly one implementation.
+    """
+    floors = np.full(n_lanes, m, dtype=np.int64)
+    for i, j in plan.items():
+        floors[i] = np.int64(bases[j])
+    return floors
+
+
+def run_topology(topo: Topology, *, recorder=None, resume=None,
+                 fail_schedule=None) -> TopologyResult:
+    """Execute every link of the graph in one vmapped windowed session.
+
+    ``recorder`` / ``resume`` / ``fail_schedule`` pass straight through
+    to the batched windowed kernel loop — chunk-boundary checkpoint
+    capture, deterministic resume, and mid-stream failure-schedule swaps
+    for the replay subsystem (``repro.replay``). On resume the
+    commit-floor history of the already-executed chunks is reconstructed
+    from the checkpoint's base trajectory via the same ``plan_floors``
+    rule, so a replayed ``LinkResult.commit_floors`` is bit-identical to
+    the original run's.
+    """
     specs = link_specs(topo)
     m = specs[0].m
     up = _floor_plan(topo)
     floors_hist: List[np.ndarray] = []
+    if resume is not None:
+        floors_hist = [plan_floors(up, len(specs), m, row)
+                       for row in np.asarray(resume.bases_hist)[:-1]]
 
     def commit_floors(t: int, bases: np.ndarray) -> np.ndarray:
-        floors = np.full(len(specs), m, dtype=np.int64)
-        for i, j in up.items():
-            floors[i] = bases[j]
+        floors = plan_floors(up, len(specs), m, bases)
         floors_hist.append(floors.copy())
         return floors
 
-    results = _run_windowed_batch(specs, commit_floors=commit_floors)
+    results = _run_windowed_batch(specs, commit_floors=commit_floors,
+                                  recorder=recorder, resume=resume,
+                                  fail_schedule=fail_schedule)
     hist = np.stack(floors_hist)                  # (n_chunks, L)
     links = {
         l.name: LinkResult(link=l, result=r, commit_floors=hist[:, i])

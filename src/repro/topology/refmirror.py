@@ -26,7 +26,7 @@ import numpy as np
 from ..core.refsim import RefResult, _RefMachine
 from ..core.simulator import _max_msg_by_round, _widen_on_overflow
 from .engine import (LinkAccessors, TopologyAccessors, _floor_plan,
-                     link_specs)
+                     link_specs, plan_floors)
 from .graph import LinkSpec, Topology
 
 __all__ = ["RefLinkResult", "RefTopologyResult", "run_topology_reference"]
@@ -47,7 +47,12 @@ class RefTopologyResult(TopologyAccessors):
     links: Dict[str, RefLinkResult]
 
 
-def run_topology_reference(topo: Topology) -> RefTopologyResult:
+def run_topology_reference(topo: Topology,
+                           fail_schedule=None) -> RefTopologyResult:
+    """Oracle topology run; ``fail_schedule(t)`` may return one
+    ``FailureScenario`` per link at a chunk start to swap the masks in
+    force from round ``t`` on (the numpy twin of the engine's mid-stream
+    ``FailArrays`` swap — replay-with-injection ground truth)."""
     specs = link_specs(topo)
     spec0 = specs[0]
     n_l, m = len(specs), spec0.m
@@ -63,11 +68,14 @@ def run_topology_reference(topo: Topology) -> RefTopologyResult:
     t = 0
     while t < spec0.steps:
         c = min(c_full, spec0.steps - t)
+        if fail_schedule is not None:
+            new_fails = fail_schedule(t)
+            if new_fails is not None:
+                for mac, f in zip(machines, new_fails):
+                    mac.set_failures(f)
         # commit floors for this chunk: a chained link may originate only
         # what its upstream link has retired (durably delivered) so far.
-        floors = np.full(n_l, m, dtype=np.int64)
-        for i, j in up.items():
-            floors[i] = bases[j]
+        floors = plan_floors(up, n_l, m, bases)
         floors_hist.append(floors.copy())
         # per-link overflow check + batch-wide growth, exactly like the
         # engine: the whole batch shares one window width.

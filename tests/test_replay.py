@@ -1,0 +1,477 @@
+"""repro.replay: checkpointing, deterministic replay, what-if forking.
+
+The replay contract under test:
+
+* replay from any chunk-boundary checkpoint with an *unchanged* schedule
+  is bit-identical to the original run — frontiers, delivered masks,
+  per-round metrics — for single-link and topology runs, engine and
+  numpy oracle both;
+* replay with injected schedule edits equals a from-scratch run
+  executing the merged schedule (engine and oracle);
+* a forked what-if batch executes N schedule variants as one vmapped
+  chunk stream, reusing the compiled chunk (trace-count deltas are
+  measured, not assumed);
+* traces survive an npz save/load round-trip bit-exactly;
+* replay stays exact across the adaptive-growth and dense-fallback
+  boundaries (checkpoint while windowed, overflow after resume).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import FailureScenario, RSMConfig, SimConfig
+from repro.core.simulator import (build_spec, chunk_trace_count,
+                                  run_simulation)
+from repro.replay import (ForkSpec, Injection, RunTrace, fork_whatif,
+                          record_batch, record_simulation, record_topology,
+                          replay, replay_oracle, replay_topology,
+                          replay_topology_oracle)
+from repro.topology import Topology
+
+BFT1 = RSMConfig.bft(1)
+OUTPUTS = ("quack_time", "deliver_time", "retry", "recv_has")
+METRICS = ("cross_msgs", "intra_msgs", "resends", "acks", "delivered",
+           "min_quack_prefix")
+
+SIM = SimConfig(n_msgs=96, steps=120, window=1, phi=6, window_slots=24,
+                chunk_steps=8)
+# one sender crashes mid-stream: its scheduled originals after the crash
+# are never dispatched, so schedule edits around the crash genuinely
+# change delivery.
+CRASH_S0 = FailureScenario(crash_s=(16, -1, -1, -1))
+DROP_R0 = FailureScenario(byz_recv_drop=(True, False, False, False))
+
+
+def _assert_results_equal(a, b, frontiers=True, metrics=True):
+    for out in OUTPUTS:
+        assert np.array_equal(getattr(a, out), getattr(b, out)), out
+    if frontiers:
+        assert np.array_equal(a.gc_frontiers, b.gc_frontiers)
+    if metrics:
+        for name in METRICS:
+            assert np.array_equal(np.asarray(getattr(a.metrics, name)),
+                                  np.asarray(getattr(b.metrics, name))), name
+
+
+def _assert_matches_oracle(res, ref, frontiers=True):
+    for out in OUTPUTS:
+        assert np.array_equal(getattr(res, out), getattr(ref, out)), out
+    if frontiers:
+        assert np.array_equal(res.gc_frontiers, ref.gc_frontiers)
+    assert np.array_equal(np.asarray(res.metrics.resends), ref.resends)
+    assert np.array_equal(np.asarray(res.metrics.cross_msgs),
+                          ref.cross_msgs)
+
+
+# --- checkpointing + unchanged replay ------------------------------------
+
+def test_unchanged_replay_bit_identical_from_every_checkpoint():
+    spec = build_spec(BFT1, BFT1, SIM, CRASH_S0)
+    res, trace = record_simulation(spec)
+    # recording itself does not perturb the run
+    _assert_results_equal(res, run_simulation(spec))
+    assert len(trace.checkpoints) == (SIM.steps - 1) // SIM.chunk_steps + 1
+    for t in trace.boundaries().tolist():
+        rr = replay(trace, t)[0]
+        _assert_results_equal(rr, res)
+        assert rr.final_window_slots == res.final_window_slots
+    # the replay oracle reproduces the original run too
+    _assert_matches_oracle(res, replay_oracle(trace))
+
+
+def test_thinned_recording_and_missing_checkpoint():
+    spec = build_spec(BFT1, BFT1, SIM)
+    res, trace = record_simulation(spec, every=2)
+    bounds = trace.boundaries()
+    assert np.array_equal(bounds % (2 * SIM.chunk_steps),
+                          np.zeros_like(bounds))
+    _assert_results_equal(replay(trace, int(bounds[-1]))[0], res)
+    with pytest.raises(KeyError, match="no checkpoint at round 8"):
+        trace.checkpoint_at(8)
+    assert trace.last_checkpoint_before(23).t == 16
+
+
+def test_trace_save_load_roundtrip(tmp_path):
+    spec = build_spec(BFT1, BFT1, SIM, DROP_R0)
+    res, trace = record_simulation(spec)
+    path = str(tmp_path / "trace.npz")
+    trace.save(path)
+    loaded = RunTrace.load(path)
+    assert [s for s in loaded.specs] == [s for s in trace.specs]
+    assert loaded.lane_names == trace.lane_names
+    assert np.array_equal(loaded.boundaries(), trace.boundaries())
+    for c0, c1 in zip(trace.checkpoints, loaded.checkpoints):
+        for name in ("bases", "floors", "bases_hist", "out_deliver"):
+            assert np.array_equal(np.asarray(getattr(c0, name)),
+                                  np.asarray(getattr(c1, name))), name
+        for f in c0.state._fields:
+            assert np.array_equal(np.asarray(getattr(c0.state, f)),
+                                  np.asarray(getattr(c1.state, f))), f
+    _assert_results_equal(replay(loaded, 16)[0], res)
+
+
+# --- injection ------------------------------------------------------------
+
+@pytest.mark.parametrize("at_step,edit", [
+    (16, CRASH_S0),                                      # crash mid-run
+    (16, FailureScenario(crash_r=(16, -1, -1, -1))),     # receiver crash
+    (16, FailureScenario(byz_recv_drop=(True, False, False, False))),
+], ids=["crash_sender", "crash_receiver", "open_partition"])
+def test_injected_replay_equals_merged_schedule(at_step, edit):
+    spec = build_spec(BFT1, BFT1, SIM)
+    res, trace = record_simulation(spec)
+    inj = [Injection(at_step, edit)]
+    ri = replay(trace, at_step, inj)[0]
+    # equals the from-scratch engine run of the merged schedule...
+    scratch = replay(trace, 0, inj)[0]
+    _assert_results_equal(ri, scratch)
+    # ...and the from-scratch numpy oracle of the merged schedule
+    _assert_matches_oracle(ri, replay_oracle(trace, inj))
+    # the injected future genuinely diverges from the recorded one
+    assert any(not np.array_equal(getattr(ri, out), getattr(res, out))
+               for out in OUTPUTS)
+
+
+def test_heal_injection():
+    """Open a partition from round 0 (static), heal it mid-run: the
+    replayed future delivers directly what the unhealed run only gets
+    through loss detection + retransmission."""
+    sim = dataclasses.replace(SIM, steps=200)
+    spec = build_spec(BFT1, BFT1, sim, DROP_R0)
+    res, trace = record_simulation(spec)
+    heal = [Injection(16, FailureScenario.none())]
+    ri = replay(trace, 16, heal)[0]
+    _assert_matches_oracle(ri, replay_oracle(trace, heal))
+    assert not np.array_equal(ri.deliver_time, res.deliver_time)
+    assert (np.sum(ri.metrics.resends) < np.sum(res.metrics.resends))
+
+
+def test_injection_validation():
+    spec = build_spec(BFT1, BFT1, SIM)
+    _, trace = record_simulation(spec)
+    with pytest.raises(ValueError, match="not a chunk boundary"):
+        replay(trace, 16, [Injection(19, CRASH_S0)])
+    with pytest.raises(ValueError, match="outside the replayed range"):
+        replay(trace, 16, [Injection(8, CRASH_S0)])
+    with pytest.raises(ValueError, match="replicas"):
+        replay(trace, 16, [Injection(
+            16, FailureScenario(crash_s=(1, -1)))])
+    with pytest.raises(KeyError, match="unknown lane"):
+        replay(trace, 16, {"nope": [Injection(16, CRASH_S0)]})
+    with pytest.raises(KeyError, match="no checkpoint"):
+        replay(trace, 13)
+
+
+def test_scenario_batch_replay():
+    """Batched (multi-lane) traces replay too: per-lane checkpoint bases
+    resume and per-lane injections apply to their own lane only."""
+    specs = [build_spec(BFT1, BFT1, SIM, f)
+             for f in (FailureScenario.none(), DROP_R0)]
+    results, trace = record_batch(specs)
+    for t in (0, 16, 48):
+        rr = replay(trace, t)
+        for r0, r1 in zip(results, rr):
+            _assert_results_equal(r0, r1)
+    ri = replay(trace, 16, {1: [Injection(16, FailureScenario.none())]})
+    _assert_results_equal(ri[0], results[0])          # lane 0 untouched
+    assert not np.array_equal(ri[1].deliver_time, results[1].deliver_time)
+
+
+# --- adaptive growth / dense fallback across the replay boundary ----------
+
+GC_STALL = FailureScenario(byz_bcast_partial=(True, False, False, False),
+                           bcast_limit=2, crash_r=(-1, 8, -1, -1))
+
+
+def test_replay_across_dense_fallback_boundary():
+    """Checkpoint while windowed; after resume the stalled frontier
+    forces growth and then the dense-layout migration
+    (``_migrate_dense_batch``) — the replayed run takes the identical
+    trajectory and stays bit-identical to the original, the dense run
+    and the oracle."""
+    sim = SimConfig(n_msgs=64, steps=200, window=1, phi=6,
+                    window_slots=16, chunk_steps=8)
+    spec = build_spec(BFT1, BFT1, sim, GC_STALL)
+    res, trace = record_simulation(spec)
+    assert res.final_window_slots == spec.m       # original fell back
+    migration = [e for e in res.window_growth_events if e.dense_migration]
+    assert migration, "fixture must cross the dense-fallback boundary"
+    mig_chunk = (migration[0].step // sim.chunk_steps) * sim.chunk_steps
+    windowed_bounds = [int(c.t) for c in trace.checkpoints
+                       if c.window_slots < spec.m]
+    assert windowed_bounds and windowed_bounds[-1] <= mig_chunk
+    for t in windowed_bounds:                     # resume pre-migration
+        rr = replay(trace, t)[0]
+        _assert_results_equal(rr, res)
+        assert rr.final_window_slots == spec.m
+        assert [e for e in rr.window_growth_events if e.dense_migration]
+    # post-migration checkpoints resume in the dense layout
+    dense_bounds = [int(c.t) for c in trace.checkpoints
+                    if c.window_slots == spec.m]
+    assert dense_bounds
+    _assert_results_equal(replay(trace, dense_bounds[0])[0], res)
+    _assert_matches_oracle(res, replay_oracle(trace))
+
+
+def test_replay_across_adaptive_growth_boundary():
+    """Same, for plain 2x growth (no dense migration): checkpoints taken
+    at the initial width resume and re-take the identical growth."""
+    sim = SimConfig(n_msgs=128, steps=128 // 4 + 80, window=1, phi=6,
+                    window_slots=16, chunk_steps=8)
+    stall = FailureScenario(byz_bcast_partial=(True, False, False, False),
+                            bcast_limit=2)
+    spec = build_spec(BFT1, BFT1, sim, stall)
+    res, trace = record_simulation(spec)
+    assert spec.window_slots < res.final_window_slots < spec.m
+    assert res.window_growth_events
+    assert all(not e.dense_migration for e in res.window_growth_events)
+    first_grow = res.window_growth_events[0]
+    assert first_grow.scenario == 0 and first_grow.old_w == 16
+    narrow = [int(c.t) for c in trace.checkpoints
+              if c.window_slots == spec.window_slots]
+    for t in (narrow[0], narrow[-1]):
+        rr = replay(trace, t)[0]
+        _assert_results_equal(rr, res)
+        assert rr.final_window_slots == res.final_window_slots
+        assert rr.window_growth_events == res.window_growth_events
+
+
+# --- topology replay ------------------------------------------------------
+
+TOPO_SIM = SimConfig(n_msgs=96, steps=160, window=1, phi=6,
+                     window_slots=24, chunk_steps=8)
+
+
+def _chain_topo():
+    return Topology.chain(["a", "b", "c"], BFT1, TOPO_SIM)
+
+
+def test_topology_unchanged_replay_bit_identical():
+    topo = _chain_topo()
+    r0, trace = record_topology(topo)
+    assert trace.floor_plan == {1: 0}
+    for t in (0, 24, 64):
+        rr = replay_topology(trace, t)
+        for name in trace.lane_names:
+            _assert_results_equal(rr[name].result, r0[name].result)
+            assert np.array_equal(rr[name].commit_floors,
+                                  r0[name].commit_floors)
+    ref = replay_topology_oracle(trace)
+    for name in trace.lane_names:
+        _assert_matches_oracle(r0[name].result, ref[name].result)
+        assert np.array_equal(r0[name].commit_floors,
+                              ref[name].commit_floors)
+
+
+def test_topology_injected_replay_matches_oracle():
+    """Crash the upstream link's senders mid-stream: the downstream
+    link's commit floor freezes with it, and engine == oracle on every
+    output and every floor trajectory."""
+    topo = _chain_topo()
+    r0, trace = record_topology(topo)
+    inj = {"a->b": [Injection(16, FailureScenario(crash_s=(16,) * 4))]}
+    ri = replay_topology(trace, 16, inj)
+    ref = replay_topology_oracle(trace, inj)
+    for name in trace.lane_names:
+        _assert_matches_oracle(ri[name].result, ref[name].result)
+        assert np.array_equal(ri[name].commit_floors,
+                              ref[name].commit_floors)
+    # the crash genuinely cut the chain short
+    assert ri["b->c"].delivered_prefix() < r0["b->c"].delivered_prefix()
+
+
+def test_topology_trace_save_load(tmp_path):
+    topo = _chain_topo()
+    r0, trace = record_topology(topo)
+    path = str(tmp_path / "topo.npz")
+    trace.save(path)
+    loaded = RunTrace.load(path)
+    assert loaded.kind == "topology"
+    assert loaded.topology == topo
+    rr = replay_topology(loaded, 24)
+    for name in trace.lane_names:
+        _assert_results_equal(rr[name].result, r0[name].result)
+
+
+# --- forked what-if -------------------------------------------------------
+
+def test_fork_whatif_matches_individual_replays():
+    spec = build_spec(BFT1, BFT1, SIM)
+    res, trace = record_simulation(spec)
+    variants = [
+        ForkSpec("baseline"),
+        ForkSpec("crash-16", [Injection(16, CRASH_S0)]),
+        ForkSpec("crash-32", [Injection(
+            32, FailureScenario(crash_s=(32, -1, -1, -1)))]),
+        ForkSpec("partition", [Injection(16, DROP_R0)]),
+    ]
+    report = fork_whatif(trace, 16, variants)
+    assert report.lane_names == ["lane0"]
+    # every fork's per-message outputs and per-round metric streams are
+    # bit-identical to its one-at-a-time replay. (Frontier trajectories
+    # are excluded: the fork batch shares one window width, so a stalled
+    # fork widens everyone's window and retirement can batch up — the
+    # outputs are invariant to that, the rotation schedule is not.)
+    for fs in variants:
+        solo = replay(trace, 16, fs.injections)[0]
+        _assert_results_equal(report[fs.name].results[0], solo,
+                              frontiers=False)
+    # the baseline fork reproduces the parent run exactly
+    _assert_results_equal(report["baseline"].results[0], res,
+                          frontiers=False)
+    assert report["baseline"].divergence["lane0"]["delivered"] == 0
+    # the futures genuinely diverge: a crashed sender's tail messages
+    # only arrive through loss detection + rotated retransmission
+    # (eventual delivery holds — the cost shows up in resends and time)
+    base_stats = report["baseline"].stats["lane0"]
+    crash = report["crash-16"].stats["lane0"]
+    assert crash["resends"] > base_stats["resends"]
+    assert crash["delivery_step"] > base_stats["delivery_step"]
+    assert report["crash-16"].divergence["lane0"]["resends"] > 0
+    assert (report["partition"].stats["lane0"]["resends"]
+            > base_stats["resends"])
+    rows = report.rows()
+    assert len(rows) == 4 and {r["fork"] for r in rows} == {
+        "baseline", "crash-16", "crash-32", "partition"}
+
+
+def test_fork_whatif_reuses_compiled_chunk():
+    """The fork batch costs at most the one batch-width tracing of the
+    chunk program — and zero once a batch of that width is warm:
+    re-forking (different edits, same shapes) never recompiles."""
+    spec = build_spec(BFT1, BFT1, SIM)
+    _, trace = record_simulation(spec)
+    variants = [ForkSpec("a"), ForkSpec("b", [Injection(16, CRASH_S0)]),
+                ForkSpec("c", [Injection(24, DROP_R0)])]
+    first = fork_whatif(trace, 16, variants)
+    assert first.chunk_traces <= 2      # rotate + final no-rotate chunk
+    again = fork_whatif(trace, 24, [
+        ForkSpec("x", [Injection(24, CRASH_S0)]), ForkSpec("y"),
+        ForkSpec("z", [Injection(32, DROP_R0)])])
+    assert again.chunk_traces == 0      # same shapes: fully warm
+    before = chunk_trace_count()
+    replay(trace, 16, [Injection(16, CRASH_S0)])
+    assert chunk_trace_count() == before    # replay reuses parent width
+
+
+def test_fork_whatif_topology():
+    topo = _chain_topo()
+    r0, trace = record_topology(topo)
+    inj = {"a->b": [Injection(16, FailureScenario(crash_s=(16,) * 4))]}
+    report = fork_whatif(trace, 16, [ForkSpec("baseline"),
+                                     ForkSpec("upstream-crash", inj)])
+    for name in trace.lane_names:
+        _assert_results_equal(report["baseline"][name],
+                              r0[name].result, frontiers=False)
+    solo = replay_topology(trace, 16, inj)
+    for name in trace.lane_names:
+        _assert_results_equal(report["upstream-crash"][name],
+                              solo[name].result, frontiers=False)
+    assert (report["upstream-crash"].divergence["b->c"]["delivered"] < 0)
+
+
+def test_fork_whatif_on_loaded_trace_has_baseline(tmp_path):
+    """A trace loaded from disk carries no original results; the what-if
+    baseline is derived from an unchanged replay instead (bit-identical
+    to the original), so divergence never silently degrades to {}."""
+    spec = build_spec(BFT1, BFT1, SIM)
+    res, trace = record_simulation(spec)
+    path = str(tmp_path / "t.npz")
+    trace.save(path)
+    loaded = RunTrace.load(path)
+    assert loaded.results is None
+    report = fork_whatif(loaded, 16, [
+        ForkSpec("baseline"), ForkSpec("crash", [Injection(16, CRASH_S0)])])
+    assert report.baseline == {"lane0": {
+        k: v for k, v in report["baseline"].stats["lane0"].items()}}
+    assert report["crash"].divergence["lane0"]["resends"] > 0
+    in_memory = fork_whatif(trace, 16, [
+        ForkSpec("baseline"), ForkSpec("crash", [Injection(16, CRASH_S0)])])
+    assert report.baseline == in_memory.baseline
+    assert (report["crash"].divergence["lane0"]
+            == in_memory["crash"].divergence["lane0"])
+
+
+def test_fork_growth_event_reattribution():
+    """Fork batches re-attribute tiled lane indices back to (fork,
+    lane): pre-fork (shared prefix) events keep their original lane
+    index, post-fork events are split into fork id + lane."""
+    from repro.core.simulator import WindowGrowthEvent
+    from repro.replay.whatif import _reattribute_events
+    pre = WindowGrowthEvent(step=7, scenario=1, need=31, old_w=16,
+                            new_w=32)
+    post = WindowGrowthEvent(step=40, scenario=5, need=90, old_w=32,
+                             new_w=64)
+    out = _reattribute_events((pre, post), n_b=2, from_step=16)
+    assert out[0] == pre and out[0].fork is None
+    assert out[1].fork == 2 and out[1].scenario == 1
+    assert (out[1].step, out[1].old_w, out[1].new_w) == (40, 32, 64)
+
+
+def test_fork_rejects_duplicates_and_empty():
+    spec = build_spec(BFT1, BFT1, SIM)
+    _, trace = record_simulation(spec)
+    with pytest.raises(ValueError, match="at least one"):
+        fork_whatif(trace, 16, [])
+    with pytest.raises(ValueError, match="duplicate fork names"):
+        fork_whatif(trace, 16, [ForkSpec("a"), ForkSpec("a")])
+
+
+# --- disaster recovery as an injected event -------------------------------
+
+def test_disaster_recovery_injected_equals_static():
+    from repro.apps import run_disaster_recovery
+    sim = SimConfig(n_msgs=96, steps=60, window=1, phi=6,
+                    window_slots=24, chunk_steps=8)
+    kw = dict(crash_at=12, backup_failures={
+        "backup-1": FailureScenario(byz_recv_drop=(True, True, False,
+                                                   False))})
+    static = run_disaster_recovery(BFT1, BFT1, sim, **kw)
+    injected = run_disaster_recovery(BFT1, BFT1, sim, **kw,
+                                     inject_via_replay=True)
+    oracle = run_disaster_recovery(BFT1, BFT1, sim, **kw,
+                                   inject_via_replay=True,
+                                   use_reference=True)
+    for r in (injected, oracle):
+        assert r.elected == static.elected
+        assert r.phase1_prefixes == static.phase1_prefixes
+        assert r.final_prefixes == static.final_prefixes
+        assert r.converged == static.converged
+        assert np.array_equal(r.recovered_log, static.recovered_log)
+    assert injected.injected_at == 8          # last boundary before 12
+    assert injected.phase1_trace is not None
+    # the crash genuinely truncated the stream (what-if has room to fork)
+    assert static.phase1_prefixes[static.elected] < sim.n_msgs
+
+
+def test_growth_event_observability_in_batch():
+    """Satellite: a batched sweep records WHICH scenario forced adaptive
+    growth (and the overflow round) instead of silently growing W."""
+    sim = SimConfig(n_msgs=128, steps=128 // 4 + 80, window=1, phi=6,
+                    window_slots=16, chunk_steps=8)
+    stall = FailureScenario(byz_bcast_partial=(True, False, False, False),
+                            bcast_limit=2)
+    specs = [build_spec(BFT1, BFT1, sim, f)
+             for f in (FailureScenario.none(), stall)]
+    from repro.core.simulator import run_simulation_batch
+    batched = run_simulation_batch(specs)
+    events = batched[0].window_growth_events
+    assert events and events == batched[1].window_growth_events
+    # the first overflow is the shared dispatch ramp (both lanes at base
+    # 0 — attribution tie-breaks to lane 0); every later growth is the
+    # GC-stalled lane pinning its base while originals keep dispatching.
+    assert len(events) >= 2
+    assert all(e.scenario == 1 for e in events[1:])   # the stalled lane
+    assert all(e.new_w == 2 * e.old_w for e in events)
+    assert [e.old_w for e in events] == [16 * 2 ** i
+                                         for i in range(len(events))]
+    assert all(0 <= e.step < sim.steps for e in events)
+    assert all(not e.dense_migration for e in events)
+    # a windowed run whose window holds the dispatch ramp records none
+    roomy = dataclasses.replace(sim, n_msgs=256, steps=256 // 4 + 80,
+                                window_slots=160)
+    clean = run_simulation(build_spec(BFT1, BFT1, roomy))
+    assert clean.window_growth_events == ()
+    assert clean.gc_frontiers[-1] == 256
