@@ -1,0 +1,174 @@
+"""Pipelined superchunk engine: dispatch/sync counts + wall time.
+
+Sweeps fusion depth K x stream size x batch width on the windowed
+simulator core. For every point it reports, alongside cold/warm wall
+time, the **deterministic pipeline counters** — device dispatches
+(`chunk_dispatch_count`), host syncs (`host_sync_count`) and fresh chunk
+tracings (`chunk_trace_count`) over the warm run — so the ~K× dispatch
+and sync reduction is asserted on counts, not timings (``--check``, used
+by the fast-tier CI smoke). K = 1 is the synchronous legacy loop
+(dispatch, block, drain per chunk) and is the speedup baseline.
+
+  PYTHONPATH=src python -m benchmarks.bench_pipeline
+      [--sizes 16384,102400] [--ks 1,2,4,8] [--batch 4]
+      [--json BENCH_pipeline.json] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.core import FailureScenario, RSMConfig, SimConfig
+from repro.core.simulator import (build_spec, chunk_dispatch_count,
+                                  chunk_trace_count, host_sync_count,
+                                  run_simulation, run_simulation_batch)
+
+SIZES = (16384, 102400)
+KS = (1, 2, 4, 8)
+SENDER = RSMConfig.bft(1)
+RECEIVER = RSMConfig.bft(1)
+SEND_WINDOW = 4
+
+
+def _sim(m: int, k: int) -> SimConfig:
+    steps = m // (SENDER.n * SEND_WINDOW) + 60
+    return SimConfig(n_msgs=m, steps=steps, window=SEND_WINDOW, phi=32,
+                     window_slots="auto", chunk_steps=32, superchunk=k,
+                     debug_checks=False)
+
+
+def _measure(m: int, k: int, batch: int):
+    sim = _sim(m, k)
+    if batch <= 1:
+        specs = [build_spec(SENDER, RECEIVER, sim)]
+    else:
+        n = SENDER.n
+        fails = [FailureScenario.none()]
+        fails += [FailureScenario.crash_fraction(n, n, 0.25, seed=s,
+                                                 at_step=8)
+                  for s in range(1, batch)]
+        specs = [build_spec(SENDER, RECEIVER, sim, f) for f in fails]
+    run = (lambda: run_simulation(specs[0])) if batch <= 1 else \
+        (lambda: run_simulation_batch(specs))
+
+    t0 = time.time()
+    res = run()
+    cold = time.time() - t0
+    d0, h0, c0 = (chunk_dispatch_count(), host_sync_count(),
+                  chunk_trace_count())
+    t0 = time.time()
+    res = run()
+    warm = time.time() - t0
+    res0 = res if batch <= 1 else res[0]
+    ok = bool((res0.deliver_time >= 0).all()
+              and (res0.quack_time >= 0).all())
+    return {
+        "n_msgs": m,
+        "k": k,
+        "batch": batch,
+        "window_slots": specs[0].window_slots or specs[0].m,
+        "chunk_steps": specs[0].chunk_steps,
+        "cold_s": cold,
+        "warm_s": warm,
+        "dispatches": chunk_dispatch_count() - d0,
+        "host_syncs": host_sync_count() - h0,
+        "warm_traces": chunk_trace_count() - c0,
+        "complete": ok,
+    }
+
+
+def rows(sizes=SIZES, ks=KS, batch: int = 4):
+    out = []
+    for m in sizes:
+        for k in ks:
+            out.append(_measure(m, k, 1))
+    if batch > 1:
+        mb = min(max(sizes), 16384)
+        for k in ks:
+            out.append(_measure(mb, k, batch))
+    # speedup + shrink ratios vs the K=1 row of the same (size, batch)
+    base = {(r["n_msgs"], r["batch"]): r for r in out if r["k"] == 1}
+    for r in out:
+        b = base.get((r["n_msgs"], r["batch"]))
+        if b is not None and b["warm_s"] > 0:
+            r["speedup_vs_sync"] = b["warm_s"] / max(r["warm_s"], 1e-9)
+            r["dispatch_shrink"] = (b["dispatches"]
+                                    / max(r["dispatches"], 1))
+    return out
+
+
+def check(rs) -> bool:
+    """The CI contract: at every (size, batch) point the K-fused run
+    issues at most ceil(sync/K) + slack dispatches and as many syncs —
+    counters, not wall time (warm runs must also retrace nothing)."""
+    ok = True
+    base = {(r["n_msgs"], r["batch"]): r for r in rs if r["k"] == 1}
+    for r in rs:
+        b = base[(r["n_msgs"], r["batch"])]
+        bound = -(-b["dispatches"] // r["k"]) + 3
+        if r["dispatches"] > bound:
+            print(f"CHECK FAILED: K={r['k']} @ {r['n_msgs']} "
+                  f"dispatches {r['dispatches']} > {bound}")
+            ok = False
+        if r["host_syncs"] > r["dispatches"] + 2:
+            print(f"CHECK FAILED: K={r['k']} @ {r['n_msgs']} "
+                  f"syncs {r['host_syncs']} > dispatches + 2")
+            ok = False
+        if r["warm_traces"] != 0:
+            print(f"CHECK FAILED: K={r['k']} @ {r['n_msgs']} warm run "
+                  f"traced {r['warm_traces']} chunk programs")
+            ok = False
+        if not r["complete"]:
+            print(f"CHECK FAILED: K={r['k']} @ {r['n_msgs']} incomplete")
+            ok = False
+    return ok
+
+
+def main(sizes=SIZES, ks=KS, batch: int = 4, json_path=None,
+         run_check: bool = False):
+    rs = rows(sizes, ks, batch)
+    print("# pipelined superchunk engine (BFT1<->BFT1, window=4, "
+          "chunk=32; K=1 == synchronous loop)")
+    print("n_msgs,batch,k,window_slots,dispatches,host_syncs,"
+          "warm_traces,cold_s,warm_s,speedup_vs_sync,complete")
+    for r in rs:
+        print(f"{r['n_msgs']},{r['batch']},{r['k']},{r['window_slots']},"
+              f"{r['dispatches']},{r['host_syncs']},{r['warm_traces']},"
+              f"{r['cold_s']:.2f},{r['warm_s']:.2f},"
+              f"{r.get('speedup_vs_sync', 1.0):.2f},{r['complete']}")
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump(rs, f, indent=1, default=float)
+        print(f"# wrote {json_path}")
+    if run_check and not check(rs):
+        sys.exit(1)
+    return rs
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma-separated n_msgs sweep (default "
+                         "16384,102400); tiny values make a CI smoke")
+    ap.add_argument("--ks", type=str, default=None,
+                    help="comma-separated superchunk depths (default "
+                         "1,2,4,8; 1 = synchronous baseline)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="scenarios in the batched section (<=1 "
+                         "disables it)")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write machine-readable rows to this path")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless the dispatch/sync counters "
+                         "shrink ~K x (the CI contract; no wall-time "
+                         "assertions)")
+    args = ap.parse_args()
+    sizes = (tuple(int(s) for s in args.sizes.split(","))
+             if args.sizes else SIZES)
+    ks = tuple(int(s) for s in args.ks.split(",")) if args.ks else KS
+    if 1 not in ks:
+        ks = (1,) + ks
+    main(sizes, ks, args.batch, args.json, args.check)

@@ -81,6 +81,21 @@ def windowed():
             f"{ratio:.1f}x")
 
 
+def pipeline():
+    from benchmarks import bench_pipeline as m
+    rs = m.main(json_path="BENCH_pipeline.json")
+    singles = [r for r in rs if r["batch"] == 1]
+    big_m = max(r["n_msgs"] for r in singles)
+    best = max((r for r in singles if r["n_msgs"] == big_m),
+               key=lambda r: r["k"])
+    sync = [r for r in singles
+            if r["n_msgs"] == big_m and r["k"] == 1][0]
+    return (f"K={best['k']}@{big_m}="
+            f"{best.get('speedup_vs_sync', 1.0):.2f}x_warm,"
+            f"dispatches{sync['dispatches']}->{best['dispatches']},"
+            f"syncs{sync['host_syncs']}->{best['host_syncs']}")
+
+
 def topology():
     from benchmarks import bench_topology as m
     rs = m.main(json_path="BENCH_topology.json")
@@ -126,6 +141,7 @@ def main() -> None:
               ("fig10_heterogeneous", fig10),
               ("thm1_retransmit", thm1),
               ("windowed_sim", windowed),
+              ("pipeline", pipeline),
               ("topology_apps", topology),
               ("replay_whatif", replay),
               ("kernels", kernels),

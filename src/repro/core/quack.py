@@ -35,7 +35,69 @@ __all__ = [
     "weighted_quorum_prefix",
     "selective_quack",
     "missing_below_horizon",
+    "stake_quorum_bitmap",
 ]
+
+
+def stake_quorum_bitmap(claims: jnp.ndarray, complaints: jnp.ndarray,
+                        stakes: jnp.ndarray, quack_thresh: float,
+                        dup_thresh: float, *, use_pallas: bool = False,
+                        need_lost: bool = True):
+    """Stake-weighted QUACK / loss quorum decisions over a window (§4.1/§4.2).
+
+    claims / complaints: (n_s, n_r, W) bool — receiver claim and
+    repeat-complaint bitmaps as known to each sender. Returns
+    ``(quacked (n_s, W) bool, lost (n_s, W) bool, prefix (n_s,) int32)``
+    where ``quacked`` is the u_r+1 stake quorum, ``lost`` the r_r+1
+    duplicate-complaint quorum on not-yet-quacked messages, and
+    ``prefix`` the contiguous quacked prefix length (window-relative; the
+    caller adds its window ``base``).
+
+    ``use_pallas`` routes the reduction through the Pallas TPU kernel
+    (``kernels.quack_scan`` — MXU stake matmul + cross-block prefix
+    carry; interpret mode off-TPU via ``kernels.ops.default_interpret``).
+    Stakes are small integers in every configuration the protocol uses,
+    so the float32 quorum sums are exact and the two paths agree
+    bit-for-bit (``tests/test_pipeline.py``).
+
+    ``need_lost=False`` declares the loss quorum unused (``lost`` comes
+    back ``None``): the jnp path's complaints einsum would be DCE'd by
+    XLA anyway, but a Pallas kernel is opaque to DCE, so the kernel path
+    must drop the complaints stream at the call boundary.
+    """
+    stakes = stakes.astype(jnp.float32)
+    if use_pallas:
+        from ..kernels.ops import default_interpret, quack_scan
+        from ..kernels.quack_scan import BLOCK_W
+        # the kernel streams W in blocks of min(BLOCK_W, W) and needs
+        # the width to be a block multiple; window widths are arbitrary
+        # (auto sizing rounds to 64, growth doubles, dense fallback uses
+        # M), so pad with never-claimed columns — they sit beyond every
+        # real column, leaving the quorum bitmaps and the contiguous
+        # quacked prefix untouched — and slice back.
+        w = claims.shape[-1]
+        pad = (-w) % min(BLOCK_W, w)
+        if pad:
+            ext = jnp.zeros(claims.shape[:-1] + (pad,), dtype=bool)
+            claims = jnp.concatenate([claims, ext], axis=-1)
+            complaints = jnp.concatenate([complaints, ext], axis=-1)
+        quacked, lost, prefix = quack_scan(
+            claims, complaints, stakes, float(quack_thresh),
+            float(dup_thresh), block_w=BLOCK_W,
+            interpret=default_interpret(), compute_lost=need_lost)
+        return (quacked[..., :w],
+                None if lost is None else lost[..., :w],
+                prefix.astype(jnp.int32))
+    w_claim = jnp.einsum("ljm,j->lm", claims.astype(jnp.float32), stakes)
+    quacked = w_claim >= quack_thresh
+    lost = None
+    if need_lost:
+        w_comp = jnp.einsum("ljm,j->lm", complaints.astype(jnp.float32),
+                            stakes)
+        lost = (w_comp >= dup_thresh) & ~quacked
+    prefix = jnp.sum(jnp.cumprod(quacked.astype(jnp.int32), axis=-1),
+                     axis=-1)
+    return quacked, lost, prefix.astype(jnp.int32)
 
 
 def cumulative_ack(received: jnp.ndarray, base=0) -> jnp.ndarray:

@@ -72,7 +72,8 @@ import numpy as np
 
 from . import scheduler as sched
 from .gc import gc_frontier_device, grow_window, resolve_window_slots
-from .quack import claim_bitmask, missing_below_horizon, weighted_quorum_prefix
+from .quack import (claim_bitmask, missing_below_horizon,
+                    stake_quorum_bitmap, weighted_quorum_prefix)
 from .snapshot import (WINDOW_FILLS as _WINDOW_FILLS, device_state,
                        host_state, pad_window, window_shapes
                        as _window_shapes)
@@ -82,7 +83,8 @@ from .types import (COUNTER_BYTES, MAC_BYTES, SEQNO_BYTES, FailureScenario,
 __all__ = ["SimSpec", "SimResult", "FailArrays", "build_spec",
            "run_simulation", "run_simulation_batch",
            "require_uniform_batch", "ChunkCheckpoint", "WindowGrowthEvent",
-           "spec_failures", "spec_with_failures", "chunk_trace_count"]
+           "spec_failures", "spec_with_failures", "chunk_trace_count",
+           "chunk_dispatch_count", "host_sync_count"]
 
 NEVER = jnp.int32(-1)
 _NEVER_STEP = 2 ** 30     # orig_step pad for window slots beyond the stream
@@ -119,6 +121,9 @@ class SimSpec:
     window_slots: int = 0             # 0 => dense (full-M) state
     chunk_steps: int = 0              # rounds per compiled chunk (windowed)
     adaptive_window: bool = True      # grow W / dense-fallback on overflow
+    superchunk: int = 8               # fused chunks per dispatch (pipeline)
+    debug_checks: bool = False        # host-side mirror assertions per drain
+    use_pallas_quack: bool = False    # QUACK quorums via the Pallas kernel
 
     def scan_state_nbytes(self) -> int:
         """Device bytes of the per-round scan state (the P1 footprint).
@@ -380,6 +385,9 @@ def build_spec(sender: RSMConfig, receiver: RSMConfig,
         window_slots=w_slots,
         chunk_steps=sim.chunk_steps if w_slots else 0,
         adaptive_window=sim.adaptive_window,
+        superchunk=max(sim.superchunk, 1),
+        debug_checks=sim.debug_checks,
+        use_pallas_quack=sim.use_pallas_quack,
     )
 
 
@@ -442,7 +450,12 @@ def _fail_arrays(spec: SimSpec) -> FailArrays:
 
 
 def _neutral(spec: SimSpec) -> SimSpec:
-    """Compile-cache key: failure masks are traced, window handled apart."""
+    """Compile-cache key: failure masks are traced, window handled apart.
+
+    Host-loop knobs (``superchunk``/``debug_checks``) are normalized away
+    — they never change a compiled program. ``use_pallas_quack`` IS part
+    of the program (it selects the quorum kernel), so it survives.
+    """
     n_s, n_r = spec.n_s, spec.n_r
     return dataclasses.replace(
         spec,
@@ -450,7 +463,8 @@ def _neutral(spec: SimSpec) -> SimSpec:
         byz_send_drop=(False,) * n_s, byz_recv_drop=(False,) * n_r,
         byz_ack_advance=(0,) * n_r, byz_ack_low=(False,) * n_r,
         byz_bcast_partial=(False,) * n_r, bcast_limit=0,
-        window_slots=0, chunk_steps=0, adaptive_window=True)
+        window_slots=0, chunk_steps=0, adaptive_window=True,
+        superchunk=1, debug_checks=False)
 
 
 def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
@@ -495,18 +509,13 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
         bcast_done = state.bcast_done | bcast_sent
 
         # (2) retransmission declaration + election (knowledge of t-1) -----
-        w_complaints = jnp.einsum("ljm,j->lm",
-                                  state.repeat_c.astype(jnp.float32),
-                                  stakes_r)
-        quacked_msg_prev = (jnp.einsum("ljm,j->lm",
-                                       state.known.astype(jnp.float32),
-                                       stakes_r) >= spec.quack_thresh)
+        quacked_msg_prev, lost_prev, qprefix_prev = stake_quorum_bitmap(
+            state.known, state.repeat_c, stakes_r, spec.quack_thresh,
+            spec.dup_thresh, use_pallas=spec.use_pallas_quack)
         # losses can only be declared for messages whose original dispatch
         # already happened; under commit gating the dispatch bit (not the
         # schedule round) is what proves that.
-        declared = ((w_complaints >= spec.dup_thresh)
-                    & ~quacked_msg_prev
-                    & state.orig_sent[None, :])
+        declared = lost_prev & state.orig_sent[None, :]
         retry_new = state.retry + declared.astype(jnp.int32)
         # Fig. 6: the a-th retransmission of k is sent by the a-th successor
         # of the original sender: sender_new = (orig + #retransmit) mod n_s.
@@ -547,8 +556,7 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
         # anything to this round (constant-size piggyback, §4.3). Window
         # slots below `base` are all-quacked by the retirement rule, so the
         # absolute prefix is base + the in-window prefix.
-        qp_prev = base + jnp.sum(
-            jnp.cumprod(quacked_msg_prev.astype(jnp.int32), axis=1), axis=1)
+        qp_prev = base + qprefix_prev
         e_lk = ((orig_sender[None, :] == idx_s[:, None])
                 & orig_ok[None, :])                            # (n_s, W)
         sent_orig_to = jnp.einsum("lk,ik->li", e_lk.astype(jnp.int32),
@@ -594,8 +602,12 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
         last_cum = jnp.where(upd, cum[None, :], state.last_cum)
 
         # (5) QUACK bookkeeping --------------------------------------------
-        quacked_msg = (jnp.einsum("ljm,j->lm", known.astype(jnp.float32),
-                                  stakes_r) >= spec.quack_thresh)
+        # the lost bitmap is unused here (loss declaration works on t-1
+        # knowledge, step 2), so the loss quorum is dropped at the call
+        quacked_msg, _, qprefix = stake_quorum_bitmap(
+            known, repeat_c, stakes_r, spec.quack_thresh,
+            spec.dup_thresh, use_pallas=spec.use_pallas_quack,
+            need_lost=False)
         quack_time = jnp.where((state.quack_time < 0) & quacked_msg,
                                t, state.quack_time)
 
@@ -608,8 +620,7 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
             ack_floor=ack_floor, base=state.base,
             retired_delivered=state.retired_delivered)
 
-        qp = base + jnp.sum(jnp.cumprod(quacked_msg.astype(jnp.int32),
-                                        axis=1), axis=1)
+        qp = base + qprefix
         min_qp = jnp.min(jnp.where(honest_s, qp, _BIG))
         metrics = StepMetrics(
             cross_msgs=(orig_ok.sum() + resend.sum()).astype(jnp.int32),
@@ -713,10 +724,43 @@ def _rotate_device(s: SimState, f, w: int) -> SimState:
 # compiled windowed chunk" contract (tests/test_replay.py, bench_replay).
 _CHUNK_TRACES = [0]
 
+# pipeline observability: device dispatches issued by the windowed engine
+# (one fused superchunk = one dispatch, however many chunks it fuses) and
+# host syncs (places the host loop blocked on device results: queue
+# drains, checkpoint/migration/final state materializations). The deltas
+# across a run are what bench_pipeline and the CI smoke assert on —
+# counters, not wall time, so the ~K× dispatch reduction is checked
+# deterministically.
+_CHUNK_DISPATCHES = [0]
+_HOST_SYNCS = [0]
+
 
 def chunk_trace_count() -> int:
     """How many windowed chunk tracings (compilations) happened so far."""
     return _CHUNK_TRACES[0]
+
+
+def chunk_dispatch_count() -> int:
+    """Device dispatches issued by the windowed engine so far."""
+    return _CHUNK_DISPATCHES[0]
+
+
+def host_sync_count() -> int:
+    """Times the windowed engine's host loop blocked on device results."""
+    return _HOST_SYNCS[0]
+
+
+def _donate_state() -> Tuple[int, ...]:
+    """Scan-state donation: the chunk callable consumes the carried
+    SimState, so its input buffers can be aliased to the outputs (no
+    per-chunk O(B·W) copy, halved peak state memory). XLA implements
+    input-output aliasing on TPU/GPU; the CPU client ignores donations
+    (with a warning), so the hint is only attached where it does
+    something. Evaluated lazily (the callers are lru-cached, so once per
+    program) — probing the backend at import time would initialize JAX
+    as an import side effect and freeze the decision before the user
+    could configure the platform."""
+    return (1,) if jax.default_backend() != "cpu" else ()
 
 
 def _build_chunk(nspec: SimSpec, w_slots: int, chunk_len: int, rotate: bool):
@@ -775,7 +819,76 @@ def _compiled_batch_chunk(nspec: SimSpec, w_slots: int, chunk_len: int,
     so there is exactly one chunk kernel to keep correct.
     """
     return jax.jit(jax.vmap(_build_chunk(nspec, w_slots, chunk_len, rotate),
-                            in_axes=(0, 0, None)))
+                            in_axes=(0, 0, None)),
+                   donate_argnums=_donate_state())
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_batch_superchunk(nspec: SimSpec, w_slots: int,
+                               chunk_len: int, k: int):
+    """K fused chunk bodies (rotations included) in ONE compiled dispatch.
+
+    A ``lax.scan`` over chunk boundaries: each inner iteration runs one
+    full vmapped chunk — ``chunk_len`` protocol rounds, in-graph GC
+    frontier, ring rotation — and emits its pre-rotation
+    :class:`ChunkQueue`; the scan stacks the K queues (and the K
+    per-chunk metric blocks) into one K-deep device-side buffer the host
+    drains after the dispatch returns. The chunk body is traced once
+    regardless of K (the trace counter moves by 1), host round-trips
+    drop by K×, and because the body is the *same* function the
+    synchronous loop dispatches, a fused run is bit-identical to K
+    sequential dispatches.
+
+    The host's per-boundary adaptive-window overflow check moves
+    in-graph: ``needs`` carries the precomputed dispatch horizon
+    ``dispatched_by[t0 + (i+1)*chunk_len - 1]`` per inner chunk (a
+    traced input — one compilation serves every span), and before inner
+    chunk ``i`` runs, the *exact* device bases are tested against it.
+    The moment any lane would overflow, the remaining chunk bodies are
+    skipped (a ``lax.cond`` — the untaken branch costs nothing at run
+    time) and the per-chunk ``ok`` flags tell the host how many chunks
+    actually executed, so it rewinds to that boundary and takes the
+    growth decision there with exactly the bases K = 1 would have seen.
+    """
+    chunk = jax.vmap(_build_chunk(nspec, w_slots, chunk_len, rotate=True),
+                     in_axes=(0, 0, None))
+
+    def superchunk(fail: FailArrays, state: SimState, t0, needs):
+        n_b = state.base.shape[0]
+        n_s, n_r = nspec.n_s, nspec.n_r
+        zero_q = ChunkQueue(
+            quack_time=jnp.zeros((n_b, n_s, w_slots), jnp.int32),
+            deliver_time=jnp.zeros((n_b, w_slots), jnp.int32),
+            retry=jnp.zeros((n_b, n_s, w_slots), jnp.int32),
+            recv_has=jnp.zeros((n_b, n_r, w_slots), bool),
+            base=jnp.zeros((n_b,), jnp.int32),
+            count=jnp.zeros((n_b,), jnp.int32))
+        zero_ms = StepMetrics(*(jnp.zeros((n_b, chunk_len), jnp.int32)
+                                for _ in StepMetrics._fields))
+
+        def body(carry, xs):
+            st, alive = carry
+            i, need_i = xs
+            # the same per-scenario rule the host loop applies at a
+            # boundary: window need capped by the commit floor, measured
+            # against each lane's own (exact, in-graph) base
+            over = (jnp.minimum(need_i, fail.commit_floor - 1)
+                    - st.base)
+            ok = jnp.logical_and(alive, (over < w_slots).all())
+            st, ms, queue = jax.lax.cond(
+                ok,
+                lambda s: chunk(fail, s, t0 + i * chunk_len),
+                lambda s: (s, zero_ms,
+                           zero_q._replace(base=s.base)),
+                st)
+            return (st, ok), (ms, queue, ok)
+
+        (state, _), (ms, queues, oks) = jax.lax.scan(
+            body, (state, jnp.bool_(True)),
+            (jnp.arange(k, dtype=jnp.int32), needs))
+        return state, ms, queues, oks
+
+    return jax.jit(superchunk, donate_argnums=_donate_state())
 
 
 # host materialization / width migration are the shared snapshot
@@ -918,6 +1031,32 @@ def _run_dense_batch(specs: List[SimSpec]) -> List[SimResult]:
     return out
 
 
+def _scatter_retired(bases: np.ndarray, counts: np.ndarray, srcs,
+                     outs) -> np.ndarray:
+    """Fold one drained queue block into the (B, ..., M) output mirrors.
+
+    Writes each lane's leading ``counts[b]`` window columns to absolute
+    slots ``[bases[b], bases[b] + counts[b])`` — one vectorized
+    advanced-indexing write per output array instead of a per-lane
+    Python copy loop. ``srcs``/``outs`` are the (quack_time,
+    deliver_time, retry, recv_has) quadruples. Returns the advanced
+    per-lane bases (the inputs are never mutated).
+    """
+    qq, qd, qr, qh = srcs
+    out_quack, out_deliver, out_retry, out_recv = outs
+    counts = np.asarray(counts, dtype=np.int64)
+    if counts.any():
+        w = qd.shape[-1]
+        mask = np.arange(w, dtype=np.int64)[None, :] < counts[:, None]
+        rows, cols = np.nonzero(mask)
+        abs_cols = bases[rows] + cols
+        out_quack[rows, :, abs_cols] = qq[rows, :, cols]
+        out_deliver[rows, abs_cols] = qd[rows, cols]
+        out_retry[rows, :, abs_cols] = qr[rows, :, cols]
+        out_recv[rows, :, abs_cols] = qh[rows, :, cols]
+    return bases + counts
+
+
 def _concat_metrics(n_b: int, metric_parts) -> StepMetrics:
     """Concatenate per-chunk (B, c) metric parts into (B, t) arrays."""
     if not metric_parts:
@@ -936,16 +1075,33 @@ def _run_windowed_batch(specs: List[SimSpec], commit_floors=None, *,
     """Batched windowed sweep: per-scenario failure masks AND window bases.
 
     The vmapped chunk rotates each scenario's ring buffers at its own GC
-    frontier in-graph, so the whole sweep is one compilation and one
-    device dispatch per chunk with O(B * W) state — windowed and batched
-    at once. Window overflow (checked per scenario against its own base
-    and commit floor) grows W for the whole batch; when the required
-    width would reach M the scan state migrates into the dense layout
-    (``_migrate_dense_batch``) and the same chunk loop continues —
-    partial progress is kept, never rerun. Every growth decision is
-    recorded (``SimResult.window_growth_events``) with the lane that
-    forced it and the overflow round, instead of the batch silently
-    growing W.
+    frontier in-graph, so the whole sweep is one compilation with
+    O(B * W) state — windowed and batched at once. Window overflow
+    (checked per scenario against its own base and commit floor) grows W
+    for the whole batch; when the required width would reach M the scan
+    state migrates into the dense layout (``_migrate_dense_batch``) and
+    the same chunk loop continues — partial progress is kept, never
+    rerun. Every growth decision is recorded
+    (``SimResult.window_growth_events``) with the lane that forced it
+    and the overflow round, instead of the batch silently growing W.
+
+    Execution is **pipelined** (``SimSpec.superchunk`` = K): up to K
+    full rotating chunk bodies fuse into one compiled dispatch
+    (``_compiled_batch_superchunk`` — a ``lax.scan`` over chunk
+    boundaries with a K-deep output queue), and the host drains a
+    dispatch's queue *while the next dispatch computes* (JAX async
+    dispatch; at most one dispatch is ever in flight undrained). Fusion
+    and the drain overlap both break automatically at every boundary
+    where host interaction is mandatory — recorder checkpoints,
+    ``fail_schedule`` swaps, ``commit_floors`` updates, window
+    growth/dense fallback, and the final unrotated chunk — and the
+    launch-ahead path is only taken when the conservative overflow bound
+    (host-side ``dispatched_by``/``floors`` mirrors against the
+    pre-drain bases) proves no growth decision could trigger, so every K
+    is bit-identical to the K = 1 synchronous loop in outputs, metrics,
+    frontier trajectories, growth events and recorded traces.
+    ``chunk_dispatch_count`` / ``host_sync_count`` expose the ~K×
+    dispatch and sync reduction deterministically (``bench_pipeline``).
 
     ``commit_floors``, when given, is called as ``commit_floors(t, bases)``
     before the chunk starting at round ``t`` (``bases`` = each scenario's
@@ -1013,21 +1169,75 @@ def _run_windowed_batch(specs: List[SimSpec], commit_floors=None, *,
                         if np.asarray(p.acks).shape[-1]]
         growth_events = list(resume.growth_events)
 
+    K = max(spec0.superchunk, 1)
+    debug = spec0.debug_checks
+
+    pending: List[dict] = []   # dispatched, not yet drained (≤ 1 entry)
+
+    def drain_one(ent: dict) -> None:
+        """Materialize one dispatch's K-deep queue + metric blocks and
+        fold them into the host mirrors, inner chunk by inner chunk —
+        bit-identical to K separate synchronous drains. A fused span the
+        in-graph overflow guard cut short rewinds ``t`` to the boundary
+        of the first unexecuted chunk; the loop re-enters there and
+        takes the growth decision exactly where K = 1 would have."""
+        nonlocal bases, t
+        ms, queue, oks = jax.device_get(
+            (ent["ms"], ent["queue"], ent["oks"]))
+        _HOST_SYNCS[0] += 1
+        k = ent["k"]
+        executed = k if oks is None else int(np.asarray(oks).sum())
+        if executed < k:
+            t = ent["t0"] + executed * ent["c"]
+        for i in range(executed):
+            if k == 1:
+                msp, qp = ms, queue
+            else:
+                msp = StepMetrics(*(getattr(ms, name)[i]
+                                    for name in StepMetrics._fields))
+                qp = ChunkQueue(*(getattr(queue, name)[i]
+                                  for name in ChunkQueue._fields))
+            metric_parts.append(StepMetrics(*(np.asarray(x) for x in msp)))
+            if not ent["rotate"]:
+                continue               # final chunk: nothing retired
+            # the host's base mirror must track the in-graph rotation
+            # exactly; the comparison is debug-gated so steady-state
+            # drains never block on a consistency assertion
+            if debug and not (np.asarray(qp.base) == bases).all():
+                raise RuntimeError(
+                    "window base mirror diverged from device rotation")
+            bases = _scatter_retired(
+                bases, qp.count,
+                (np.asarray(qp.quack_time), np.asarray(qp.deliver_time),
+                 np.asarray(qp.retry), np.asarray(qp.recv_has)),
+                (out_quack, out_deliver, out_retry, out_recv))
+            bases_hist.append(bases.copy())
+
+    def drain_all() -> None:
+        while pending:
+            drain_one(pending.pop(0))
+
     while t < spec0.steps:
         c = min(c_full, spec0.steps - t)
-        if fail_schedule is not None:
-            new_specs = fail_schedule(t)
-            if new_specs is not None:
-                new_specs = list(new_specs)
-                if (len(new_specs) != n_b
-                        or any(_neutral(s) != nspec for s in new_specs)):
-                    raise ValueError(
-                        "fail_schedule must return one spec per lane, "
-                        "differing from the originals only in failure "
-                        "masks")
-                fails = _stacked_fails(new_specs)._replace(
-                    commit_floor=jnp.asarray(floors, dtype=jnp.int32))
+        # (a) failure-schedule swap: host-only work — the masks are
+        # traced inputs, so a swap needs no device sync
+        new_specs = None if fail_schedule is None else fail_schedule(t)
+        if new_specs is not None:
+            new_specs = list(new_specs)
+            if (len(new_specs) != n_b
+                    or any(_neutral(s) != nspec for s in new_specs)):
+                raise ValueError(
+                    "fail_schedule must return one spec per lane, "
+                    "differing from the originals only in failure "
+                    "masks")
+            fails = _stacked_fails(new_specs)._replace(
+                commit_floor=jnp.asarray(floors, dtype=jnp.int32))
+        # (b) recorder checkpoint: mandatory host interaction — flush
+        # the pipeline so the captured state is exactly the boundary
+        # state and the recorded trace stays bit-exact
         if recorder is not None and recorder.wants(t):
+            drain_all()
+            _HOST_SYNCS[0] += 1
             recorder.capture(ChunkCheckpoint(
                 t=t, window_slots=w, bases=bases.copy(),
                 state=_np_state(state), fails=_np_state(fails),
@@ -1037,21 +1247,30 @@ def _run_windowed_batch(specs: List[SimSpec], commit_floors=None, *,
                 metric_parts=tuple(metric_parts),
                 bases_hist=np.stack(bases_hist),
                 growth_events=tuple(growth_events)))
+        # (c) commit floors are a function of this boundary's actual
+        # retired prefixes, so the pipeline drains before asking
         if commit_floors is not None:
+            drain_all()
             new_floors = np.asarray(commit_floors(t, bases.copy()),
                                     dtype=np.int64)
             if not np.array_equal(new_floors, floors):
                 floors = new_floors
                 fails = fails._replace(
                     commit_floor=jnp.asarray(floors, dtype=jnp.int32))
-        # per-scenario overflow check: a scenario dispatches nothing past
-        # its commit floor, so its window need is capped by floor - 1 and
-        # measured against its OWN base (a chained link's lagging base
-        # must not force growth for messages it cannot send yet).
+        # (d) per-scenario overflow check: a scenario dispatches nothing
+        # past its commit floor, so its window need is capped by
+        # floor - 1 and measured against its OWN base (a chained link's
+        # lagging base must not force growth for messages it cannot send
+        # yet). The check is evaluated against the host-side
+        # dispatched_by/floors mirrors first; only a *potential*
+        # overflow blocks on the in-flight dispatch for the exact bases.
         need_b = np.minimum(int(dispatched_by[t + c - 1]), floors - 1)
+        if pending and (need_b - bases >= w).any():
+            drain_all()
         over = need_b - bases
         b_worst = int(over.argmax())
         if over[b_worst] >= w:
+            drain_all()
             new_w = _widen_on_overflow(spec0, w, int(bases[b_worst]),
                                        int(need_b[b_worst]), t + c - 1)
             growth_events.append(WindowGrowthEvent(
@@ -1063,48 +1282,71 @@ def _run_windowed_batch(specs: List[SimSpec], commit_floors=None, *,
                 state = _migrate_dense_batch(spec0, state, bases, out_quack,
                                              out_deliver, out_retry,
                                              out_recv)
+                _HOST_SYNCS[0] += 1
                 bases[:] = 0
                 w = m
             else:
                 state = _grow_state(state, new_w)
                 w = new_w
+        # (e) fusion span: up to K full rotating chunks per dispatch,
+        # broken at every boundary where host interaction is mandatory —
+        # a recorder checkpoint, a failure-schedule swap, a commit-floor
+        # update, or the final (unrotated) chunk. Window overflow inside
+        # the span is guarded *in-graph* (the superchunk stops at the
+        # first boundary any lane would overflow and reports how far it
+        # got), so the fusion length never depends on device results.
+        # the replay subsystem stays on K = 1 chunk programs end to end:
+        # recorded (parent) runs execute chunk-at-a-time so they compile
+        # exactly the programs every later resume / schedule-edited
+        # replay reuses — fusing either side would mint per-span-length
+        # programs and break the replay/fork zero-recompilation
+        # contract for some checkpoint spacings (tests/test_replay.py);
+        # async drains still apply.
+        fusible = (resume is None and fail_schedule is None
+                   and recorder is None)
         last = t + c >= spec0.steps
-        state, ms, queue = _compiled_batch_chunk(cspec, w, c, not last)(
-            fails, state, jnp.int32(t))
-        metric_parts.append(jax.tree_util.tree_map(np.asarray, ms))
-        t += c
-        if not last:
-            counts = np.asarray(queue.count)
-            # the host's base mirror must track the in-graph rotation
-            # exactly — retired columns land at absolute slots [base, base+f)
-            if not (np.asarray(queue.base) == bases).all():
-                raise RuntimeError(
-                    "window base mirror diverged from device rotation")
-            if counts.any():
-                qq = np.asarray(queue.quack_time)
-                qd = np.asarray(queue.deliver_time)
-                qr = np.asarray(queue.retry)
-                qh = np.asarray(queue.recv_has)
-                for b in range(n_b):
-                    f = int(counts[b])
-                    if f:
-                        lo = int(bases[b])
-                        out_quack[b, :, lo:lo + f] = qq[b, :, :f]
-                        out_deliver[b, lo:lo + f] = qd[b, :f]
-                        out_retry[b, :, lo:lo + f] = qr[b, :, :f]
-                        out_recv[b, :, lo:lo + f] = qh[b, :, :f]
-                        bases[b] = lo + f
-            bases_hist.append(bases.copy())
+        k = 1
+        if not last and c == c_full and commit_floors is None and fusible:
+            k = min(K, (spec0.steps - t - 1) // c_full)
+        # launch-ahead is safe only when the conservative bound — zero
+        # frontier advance over the whole span, measured from the
+        # (possibly pre-drain) host bases — proves the in-graph overflow
+        # guard cannot fire, so this span is final and the next
+        # boundary's planning needs nothing from this dispatch's results
+        span_need = np.minimum(int(dispatched_by[t + k * c - 1]),
+                               floors - 1)
+        async_ok = K > 1 and bool((span_need - bases < w).all())
+        # (f) dispatch, then drain the *previous* dispatch's queue while
+        # this one computes (async double buffering; JAX dispatch is
+        # asynchronous, so the call returns before the device finishes)
+        if k == 1:
+            state, ms, queue = _compiled_batch_chunk(cspec, w, c,
+                                                     not last)(
+                fails, state, jnp.int32(t))
+            oks = None
+        else:
+            needs = np.asarray(dispatched_by[t + c - 1:t + k * c:c],
+                               dtype=np.int32)
+            state, ms, queue, oks = _compiled_batch_superchunk(
+                cspec, w, c, k)(fails, state, jnp.int32(t),
+                                jnp.asarray(needs))
+        _CHUNK_DISPATCHES[0] += 1
+        pending.append(dict(t0=t, k=k, c=c, rotate=not last, ms=ms,
+                            queue=queue, oks=oks))
+        t += k * c
+        while len(pending) > 1:
+            drain_one(pending.pop(0))
+        if not async_ok:
+            drain_all()   # sync regime (and the superchunk=1 legacy loop)
 
+    drain_all()
     final = _np_state(state)
-    for b in range(n_b):
-        lo = int(bases[b])
-        live = min(w, m - lo)
-        if live > 0:
-            out_quack[b, :, lo:lo + live] = final.quack_time[b, :, :live]
-            out_deliver[b, lo:lo + live] = final.deliver_time[b, :live]
-            out_retry[b, :, lo:lo + live] = final.retry[b, :, :live]
-            out_recv[b, :, lo:lo + live] = final.recv_has[b, :, :live]
+    _HOST_SYNCS[0] += 1
+    _scatter_retired(
+        bases, np.minimum(w, m - bases).clip(min=0),
+        (final.quack_time, final.deliver_time, final.retry,
+         final.recv_has),
+        (out_quack, out_deliver, out_retry, out_recv))
 
     traj = np.stack(bases_hist)                     # (n_boundaries, n_b)
     all_metrics = _concat_metrics(n_b, metric_parts)
@@ -1156,10 +1398,12 @@ def require_uniform_batch(specs: Sequence[SimSpec]) -> None:
     """
     nspec = _neutral(specs[0])
     win_key = (specs[0].window_slots, specs[0].chunk_steps,
-               specs[0].adaptive_window)
+               specs[0].adaptive_window, specs[0].superchunk,
+               specs[0].debug_checks)
     for s in specs[1:]:
         if (_neutral(s) != nspec
-                or (s.window_slots, s.chunk_steps, s.adaptive_window)
+                or (s.window_slots, s.chunk_steps, s.adaptive_window,
+                    s.superchunk, s.debug_checks)
                 != win_key):
             raise ValueError("run_simulation_batch: specs differ outside "
                              "their failure masks; batch members must share "

@@ -223,6 +223,28 @@ class SimConfig:
                      kept, never rerun. False: raise ``ValueError`` (the
                      strict pre-growth behaviour, useful for sizing
                      tests).
+    superchunk:      fusion depth K of the pipelined windowed engine: up
+                     to K chunk bodies (rotations included) execute
+                     inside ONE compiled dispatch (``lax.scan`` over
+                     chunk boundaries, K-deep output queue), and the host
+                     drains a dispatch's queue while the *next* dispatch
+                     computes (async double buffering). Fusion breaks
+                     automatically at every boundary where host
+                     interaction is mandatory — recorder checkpoints,
+                     ``fail_schedule``/``commit_floors`` updates,
+                     adaptive window growth and dense fallback — so any
+                     K is bit-identical to K = 1. ``superchunk=1``
+                     restores the fully synchronous per-chunk loop
+                     (dispatch, block, drain).
+    debug_checks:    enable per-drain host-side invariant checks (the
+                     window-base mirror vs the in-graph rotation). Off by
+                     default so steady-state drains never block on a
+                     consistency assertion; turned on in tests.
+    use_pallas_quack: route the stake-weighted QUACK/loss quorum bitmaps
+                     (the protocol's compute hot loop) through the
+                     Pallas TPU kernel ``kernels.quack_scan`` instead of
+                     the jnp einsum path. Interpret mode on CPU (bit-
+                     faithful, slow); default off.
     """
 
     n_msgs: int = 256
@@ -235,6 +257,9 @@ class SimConfig:
     window_slots: Optional[object] = None     # None | "auto" | int
     chunk_steps: int = 32
     adaptive_window: bool = True
+    superchunk: int = 8
+    debug_checks: bool = False
+    use_pallas_quack: bool = False
 
     def __post_init__(self):
         ws = self.window_slots
@@ -244,6 +269,8 @@ class SimConfig:
                              f"positive int, got {ws!r}")
         if self.chunk_steps <= 0:
             raise ValueError("chunk_steps must be positive")
+        if self.superchunk <= 0:
+            raise ValueError("superchunk must be positive")
 
 
 def lcm_scale_factors(total_s: float, total_r: float) -> Tuple[float, float]:

@@ -25,6 +25,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# window block streamed per grid step — the single home of the kernel's
+# alignment requirement (callers padding W to a block multiple import
+# this, e.g. core.quack.stake_quorum_bitmap).
+BLOCK_W = 512
+
+
+def _prefix_scan(quacked, prefix_ref, carry_ref):
+    """Prefix-AND scan across window blocks (carry in VMEM scratch)."""
+    alive = carry_ref[0, 0]
+    run = jnp.cumprod(quacked.astype(jnp.int32))
+    prefix_ref[0, 0] += alive * jnp.sum(run).astype(jnp.int32)
+    carry_ref[0, 0] = alive * run[-1]
+
 
 def _kernel(claims_ref, comp_ref, stakes_ref, qthr_ref, dthr_ref,
             quacked_ref, lost_ref, prefix_ref, carry_ref, *,
@@ -45,21 +58,42 @@ def _kernel(claims_ref, comp_ref, stakes_ref, qthr_ref, dthr_ref,
     lost = (w_comp >= dthr_ref[0, 0]) & ~quacked
     quacked_ref[0] = quacked[0]
     lost_ref[0] = lost[0]
-
-    # prefix-AND scan across window blocks (carry in VMEM scratch)
-    alive = carry_ref[0, 0]
-    run = jnp.cumprod(quacked[0].astype(jnp.int32))
-    prefix_ref[0, 0] += alive * jnp.sum(run).astype(jnp.int32)
-    carry_ref[0, 0] = alive * run[-1]
+    _prefix_scan(quacked[0], prefix_ref, carry_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def _kernel_no_lost(claims_ref, stakes_ref, qthr_ref,
+                    quacked_ref, prefix_ref, carry_ref, *,
+                    bw: int, n_blocks: int):
+    wj = pl.program_id(1)
+
+    @pl.when(wj == 0)
+    def _init():
+        carry_ref[...] = jnp.ones_like(carry_ref)
+        prefix_ref[...] = jnp.zeros_like(prefix_ref)
+
+    claims = claims_ref[0].astype(jnp.float32)
+    stakes = stakes_ref[...].astype(jnp.float32)
+    quacked = (stakes @ claims) >= qthr_ref[0, 0]
+    quacked_ref[0] = quacked[0]
+    _prefix_scan(quacked[0], prefix_ref, carry_ref)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_w", "interpret",
+                                    "compute_lost"))
 def quack_scan(claims, complaints, stakes, quack_thresh, dup_thresh, *,
-               block_w: int = 512, interpret: bool = True):
+               block_w: int = BLOCK_W, interpret: bool = True,
+               compute_lost: bool = True):
     """claims/complaints: (S,R,W) bool; stakes: (R,) f32.
 
     Returns (quacked (S,W) bool, lost (S,W) bool, prefix (S,) int32).
     W must be a multiple of block_w (or smaller than it).
+
+    ``compute_lost=False`` drops the loss-quorum side entirely — the
+    complaints operand is never streamed into VMEM and its stake matmul
+    never issued (Pallas kernels are opaque to XLA DCE, so a dead
+    output must be cut at the kernel boundary, not left for the
+    compiler) — and ``lost`` comes back as ``None``.
     """
     s, r, w = claims.shape
     bw = min(block_w, w)
@@ -69,30 +103,41 @@ def quack_scan(claims, complaints, stakes, quack_thresh, dup_thresh, *,
     qthr = jnp.full((1, 1), quack_thresh, jnp.float32)
     dthr = jnp.full((1, 1), dup_thresh, jnp.float32)
 
+    tile = pl.BlockSpec((1, r, bw), lambda i, j: (i, 0, j))
+    row = pl.BlockSpec((1, r), lambda i, j: (0, 0))
+    scalar = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    out_w = pl.BlockSpec((1, bw), lambda i, j: (i, j))
+    out_s = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+    common = dict(
+        grid=(s, nb),
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )
+    if not compute_lost:
+        kernel = functools.partial(_kernel_no_lost, bw=bw, n_blocks=nb)
+        quacked, prefix = pl.pallas_call(
+            kernel,
+            in_specs=[tile, row, scalar],
+            out_specs=[out_w, out_s],
+            out_shape=[
+                jax.ShapeDtypeStruct((s, w), jnp.bool_),
+                jax.ShapeDtypeStruct((s, 1), jnp.int32),
+            ],
+            **common,
+        )(claims, stakes2, qthr)
+        return quacked, None, prefix[:, 0]
     kernel = functools.partial(_kernel, bw=bw, n_blocks=nb)
     quacked, lost, prefix = pl.pallas_call(
         kernel,
-        grid=(s, nb),
-        in_specs=[
-            pl.BlockSpec((1, r, bw), lambda i, j: (i, 0, j)),
-            pl.BlockSpec((1, r, bw), lambda i, j: (i, 0, j)),
-            pl.BlockSpec((1, r), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, bw), lambda i, j: (i, j)),
-            pl.BlockSpec((1, bw), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
-        ],
+        in_specs=[tile, tile, row, scalar, scalar],
+        out_specs=[out_w, out_w, out_s],
         out_shape=[
             jax.ShapeDtypeStruct((s, w), jnp.bool_),
             jax.ShapeDtypeStruct((s, w), jnp.bool_),
             jax.ShapeDtypeStruct((s, 1), jnp.int32),
         ],
-        scratch_shapes=[pltpu.VMEM((1, 1), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
+        **common,
     )(claims, complaints, stakes2, qthr, dthr)
     return quacked, lost, prefix[:, 0]

@@ -215,6 +215,10 @@ class RunTrace:
 def _retuple(cls, d: dict):
     fields = {}
     for f in dataclasses.fields(cls):
+        if f.name not in d:
+            # field added after the trace was written: keep its default
+            # (new fields must always be default-compatible additions)
+            continue
         v = d[f.name]
         fields[f.name] = tuple(v) if isinstance(v, list) else v
     return cls(**fields)

@@ -21,6 +21,12 @@ Topology execution is always chunked (the floors must be able to move
 between chunks), so a stream small enough for ``window_slots="auto"`` to
 clamp to the dense kernel instead runs the windowed kernel at full width
 W = M — same observable results, chunk boundaries retained.
+
+Because the floors are recomputed from every boundary's actual retired
+prefixes, a commit-floor callback is a *mandatory host interaction* for
+the pipelined superchunk engine: chained runs execute chunk-at-a-time
+(fusion breaks at every boundary) and are bit-identical for every
+``SimConfig.superchunk`` setting (``tests/test_pipeline.py``).
 """
 
 from __future__ import annotations
