@@ -8,7 +8,6 @@ argument executed on real collectives.
 
 from __future__ import annotations
 
-import numpy as np
 
 
 def main():
@@ -21,7 +20,6 @@ def main():
                                      "count=32")
     import jax
     import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.crosspod import (ata_cross_pod_sync, dcn_bytes_analytic,
                                 picsou_cross_pod_sync)

@@ -1,13 +1,14 @@
 """Pipelined superchunk engine: dispatch/sync counts + wall time.
 
 Sweeps fusion depth K x stream size x batch width on the windowed
-simulator core. For every point it reports, alongside cold/warm wall
-time, the **deterministic pipeline counters** — device dispatches
-(`chunk_dispatch_count`), host syncs (`host_sync_count`) and fresh chunk
-tracings (`chunk_trace_count`) over the warm run — so the ~K× dispatch
-and sync reduction is asserted on counts, not timings (``--check``, used
-by the fast-tier CI smoke). K = 1 is the synchronous legacy loop
-(dispatch, block, drain per chunk) and is the speedup baseline.
+simulator core. Every point's warm run executes under the analysis
+sanitizer (``repro.analysis.sanitized``), which reports the
+**deterministic pipeline counters** — device dispatches, host syncs,
+fresh chunk tracings and implicit device->host transfers — so the ~K×
+dispatch and sync reduction is asserted on counts, not timings
+(``--check`` evaluates a ``DispatchContract`` per row; used by the
+fast-tier CI smoke). K = 1 is the synchronous legacy loop (dispatch,
+block, drain per chunk) and is the speedup baseline.
 
   PYTHONPATH=src python -m benchmarks.bench_pipeline
       [--sizes 16384,102400] [--ks 1,2,4,8] [--batch 4]
@@ -20,10 +21,10 @@ import argparse
 import sys
 import time
 
+from repro.analysis import DispatchContract, SanitizerReport, sanitized
 from repro.core import FailureScenario, RSMConfig, SimConfig
-from repro.core.simulator import (build_spec, chunk_dispatch_count,
-                                  chunk_trace_count, host_sync_count,
-                                  run_simulation, run_simulation_batch)
+from repro.core.simulator import (build_spec, run_simulation,
+                                  run_simulation_batch)
 
 SIZES = (16384, 102400)
 KS = (1, 2, 4, 8)
@@ -56,10 +57,11 @@ def _measure(m: int, k: int, batch: int):
     t0 = time.time()
     res = run()
     cold = time.time() - t0
-    d0, h0, c0 = (chunk_dispatch_count(), host_sync_count(),
-                  chunk_trace_count())
     t0 = time.time()
-    res = run()
+    # counters + implicit-transfer interposition; the contract itself
+    # is evaluated later in check(), per row against its K=1 baseline
+    with sanitized(check=False) as rep:
+        res = run()
     warm = time.time() - t0
     res0 = res if batch <= 1 else res[0]
     ok = bool((res0.deliver_time >= 0).all()
@@ -72,9 +74,10 @@ def _measure(m: int, k: int, batch: int):
         "chunk_steps": specs[0].chunk_steps,
         "cold_s": cold,
         "warm_s": warm,
-        "dispatches": chunk_dispatch_count() - d0,
-        "host_syncs": host_sync_count() - h0,
-        "warm_traces": chunk_trace_count() - c0,
+        "dispatches": rep.dispatches,
+        "host_syncs": rep.host_syncs,
+        "warm_traces": rep.recompiles,
+        "implicit_transfers": list(rep.transfers),
         "complete": ok,
     }
 
@@ -100,28 +103,31 @@ def rows(sizes=SIZES, ks=KS, batch: int = 4):
 
 
 def check(rs) -> bool:
-    """The CI contract: at every (size, batch) point the K-fused run
-    issues at most ceil(sync/K) + slack dispatches and as many syncs —
-    counters, not wall time (warm runs must also retrace nothing)."""
+    """The CI contract, via the analysis sanitizer's declarative form:
+    each row is replayed into a :class:`SanitizerReport` and judged
+    against a :class:`DispatchContract` derived from its own K = 1
+    baseline — at most ceil(sync/K) + 3 dispatches (one slack above the
+    engine contract, for adaptive-growth rewinds inside fused spans),
+    syncs <= dispatches + 2, zero warm retraces, zero implicit
+    device->host transfers."""
     ok = True
     base = {(r["n_msgs"], r["batch"]): r for r in rs if r["k"] == 1}
     for r in rs:
         b = base[(r["n_msgs"], r["batch"])]
-        bound = -(-b["dispatches"] // r["k"]) + 3
-        if r["dispatches"] > bound:
-            print(f"CHECK FAILED: K={r['k']} @ {r['n_msgs']} "
-                  f"dispatches {r['dispatches']} > {bound}")
-            ok = False
-        if r["host_syncs"] > r["dispatches"] + 2:
-            print(f"CHECK FAILED: K={r['k']} @ {r['n_msgs']} "
-                  f"syncs {r['host_syncs']} > dispatches + 2")
-            ok = False
-        if r["warm_traces"] != 0:
-            print(f"CHECK FAILED: K={r['k']} @ {r['n_msgs']} warm run "
-                  f"traced {r['warm_traces']} chunk programs")
+        contract = DispatchContract(
+            max_dispatches=-(-b["dispatches"] // r["k"]) + 3,
+            max_recompiles=0, max_transfers=0, sync_slack=2,
+            label=f"K={r['k']} @ {r['n_msgs']} (batch {r['batch']})")
+        rep = SanitizerReport(
+            contract=contract, dispatches=r["dispatches"],
+            host_syncs=r["host_syncs"], recompiles=r["warm_traces"],
+            transfers=tuple(r.get("implicit_transfers", ())),
+            closed=True)
+        for v in rep.violations():
+            print(f"CHECK FAILED: {contract.label}: {v}")
             ok = False
         if not r["complete"]:
-            print(f"CHECK FAILED: K={r['k']} @ {r['n_msgs']} incomplete")
+            print(f"CHECK FAILED: {contract.label}: incomplete")
             ok = False
     return ok
 

@@ -57,7 +57,8 @@ def main():
     print(f"bound_q_1e-9,{theorem1_resends(1e-9):d}")
     for fs in (1, 2, 4):
         ns = 3 * fs + 1
-        print(f"faulty_pair_frac_f{fs},{faulty_pair_bound(ns, fs, ns, fs):.3f}")
+        frac = faulty_pair_bound(ns, fs, ns, fs)
+        print(f"faulty_pair_frac_f{fs},{frac:.3f}")
     print("# delivery probability vs retries (n=12, f=3, rotation)")
     print("retries,p_delivery")
     for r in delivery_probability_curve():

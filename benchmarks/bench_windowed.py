@@ -106,7 +106,8 @@ def batch_rows(m: int = 8192, n_scenarios: int = 4):
     # completeness is judged on the failure-free scenario only; the crash
     # scenarios must still match their sequential runs bit-for-bit.
     ok = bool((runs[0].deliver_time >= 0).all()) and all(
-        np.array_equal(np.asarray(getattr(b, out)), np.asarray(getattr(s, out)))
+        np.array_equal(np.asarray(getattr(b, out)),
+                       np.asarray(getattr(s, out)))
         for b, s in zip(runs, seq)
         for out in ("quack_time", "deliver_time", "retry", "recv_has"))
     # report the kernel/width the run *ended* with: 'auto' clamps to dense

@@ -9,7 +9,7 @@ can feed fast Raft.
 
 from __future__ import annotations
 
-from repro.consensus import (AlgorandModel, FileModel, PBFTModel, RaftModel,
+from repro.consensus import (AlgorandModel, PBFTModel, RaftModel,
                              coupled_throughput)
 from repro.core import NetworkModel, RSMConfig, analytic_throughput
 

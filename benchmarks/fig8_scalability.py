@@ -10,8 +10,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core import (FailureScenario, NetworkModel, RSMConfig, SimConfig,
                         analytic_throughput, run_picsou, run_picsou_batch)
 

@@ -71,9 +71,9 @@ def main():
         net = NetworkModel.geo(1e6)
         p = analytic_throughput("picsou", cfg, cfg, net)
         a = analytic_throughput("ata", cfg, cfg, net)
+        ratio = p['throughput_msgs_per_s'] / a['throughput_msgs_per_s']
         print(f"  n={n:2d}: picsou {p['throughput_msgs_per_s']:8.1f}/s vs "
-              f"ata {a['throughput_msgs_per_s']:6.1f}/s -> "
-              f"{p['throughput_msgs_per_s'] / a['throughput_msgs_per_s']:5.1f}x")
+              f"ata {a['throughput_msgs_per_s']:6.1f}/s -> {ratio:5.1f}x")
 
 
 if __name__ == "__main__":

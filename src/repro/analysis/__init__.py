@@ -1,0 +1,51 @@
+"""repro.analysis — static & runtime correctness tooling for the engine.
+
+PICSOU's performance claim rests on contracts the type system cannot
+see: one device dispatch per K fused chunks, zero implicit device->host
+transfers inside the windowed loop, zero recompilation on warm replay
+resume. This package enforces them with three cooperating passes:
+
+``astlint``
+    A repo-specific AST linter over ``src/repro/**``: no host
+    synchronization (``.item()`` / ``float()`` / ``np.asarray()`` /
+    ``jax.device_get()``) on traced values inside scan bodies or
+    jit-reachable functions, no Python ``if``/``while`` on tracer
+    values, no ``jnp`` calls at module import time, ``donate_argnums``
+    on every scan-carrying ``jax.jit``, and consistent static-vs-traced
+    pytree field registration. Findings carry rule IDs, fix-it hints,
+    an ``# analysis: ignore[rule]`` suppression syntax and a checked-in
+    baseline (``ANALYSIS_BASELINE.txt``) for grandfathered cases.
+
+``jaxprlint``
+    A jaxpr/HLO-level auditor that traces the *actual* compiled chunk,
+    superchunk, dense and replay programs and statically detects host
+    callbacks inside fused spans, unexpected dtype widenings, large
+    non-donated buffers and per-run dispatch-count estimates — emitted
+    as the machine-readable ``ANALYSIS.json`` report.
+
+``sanitizer``
+    A runtime sanitizer context manager wiring ``jax.transfer_guard``
+    plus implicit-transfer interposition and compile-cache-miss
+    counting into any run, so tests and benches assert their dispatch
+    contract ("<= ceil(C/K)+2 dispatches, 0 implicit transfers, 0
+    recompiles warm") declaratively. The windowed engine arms it
+    automatically behind ``SimConfig.debug_checks``.
+
+``python -m repro.analysis --check`` runs all passes and is the CI
+lint gate (see ``.github/workflows/ci.yml``).
+"""
+
+from .astlint import (RULES, Finding, lint_paths, lint_source, lint_tree,
+                      load_baseline, partition)
+from .jaxprlint import (ProgramAudit, audit_callable, audit_engine,
+                        estimate_dispatches)
+from .sanitizer import (DispatchContract, SanitizerError, SanitizerReport,
+                        dispatch_bound, dispatch_contract, sanitized)
+
+__all__ = [
+    "Finding", "RULES", "lint_source", "lint_paths", "lint_tree",
+    "load_baseline", "partition",
+    "ProgramAudit", "audit_callable", "audit_engine", "estimate_dispatches",
+    "DispatchContract", "SanitizerError", "SanitizerReport",
+    "dispatch_bound", "dispatch_contract", "sanitized",
+]

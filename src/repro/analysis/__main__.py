@@ -1,0 +1,157 @@
+"""CLI driver: run all three analysis passes, emit ANALYSIS.json.
+
+Usage::
+
+    python -m repro.analysis                  # report, exit 0
+    python -m repro.analysis --check          # CI gate: exit 1 on any
+                                              # unbaselined violation
+    python -m repro.analysis --json OUT.json  # machine-readable report
+    python -m repro.analysis --skip-engine    # astlint only (fast)
+
+Passes:
+
+1. **astlint** — AST trace-discipline rules over ``src/repro``; new
+   findings (not in ``ANALYSIS_BASELINE.txt``, not suppressed inline)
+   fail the gate. Stale baseline entries are reported so the file
+   shrinks as debt is paid.
+2. **jaxprlint** — stages the engine's dense / chunk / superchunk
+   programs at a tiny shape and audits the jaxprs + lowered modules
+   for host callbacks, dtype widenings and donation.
+3. **sanitizer smoke** — one real windowed run (M=512, C=42 chunks,
+   K=8) under the dispatch contract ``<= ceil(C/K)+2`` with zero
+   implicit transfers, plus a warm rerun asserting zero recompiles.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+
+def _astlint_section(root: str, baseline_path: str) -> dict:
+    from .astlint import lint_tree, load_baseline, partition
+    findings = lint_tree(root)
+    baseline = load_baseline(baseline_path)
+    new, old = partition(findings, baseline)
+    live = {f.fingerprint() for f in findings}
+    stale = sorted(baseline - live)
+    return {
+        "root": root,
+        "baseline": baseline_path,
+        "n_findings": len(findings),
+        "new": [dataclasses.asdict(f) for f in new],
+        "grandfathered": [f.fingerprint() for f in old],
+        "stale_baseline": stale,
+        "ok": not new,
+        "rendered": [f.render() for f in new],
+    }
+
+
+def _jaxpr_section() -> dict:
+    from .jaxprlint import audit_engine
+    return audit_engine()
+
+
+def _sanitizer_section() -> dict:
+    import dataclasses as dc
+
+    from ..core import RSMConfig, SimConfig
+    from ..core.simulator import build_spec, run_simulation
+    from .sanitizer import SanitizerError, dispatch_contract, sanitized
+
+    rsm = RSMConfig.bft(1)
+    sim = SimConfig(n_msgs=512, steps=168, window=1, phi=6,
+                    window_slots=96, chunk_steps=4, superchunk=8,
+                    debug_checks=True)
+    spec = build_spec(rsm, rsm, sim)
+    out = {"shape": dict(m=spec.m, steps=spec.steps,
+                         window_slots=spec.window_slots,
+                         chunk_steps=spec.chunk_steps,
+                         superchunk=spec.superchunk)}
+    try:
+        with sanitized(dispatch_contract(spec, label="cold")) as cold:
+            run_simulation(spec)
+        # second run: every program is compiled — the warm contract
+        # additionally demands zero re-traces (the replay-resume
+        # guarantee, measured on the same counters resume uses)
+        with sanitized(dispatch_contract(spec, warm=True,
+                                         label="warm")) as warm:
+            run_simulation(dc.replace(spec))
+        out["cold"] = cold.to_dict()
+        out["warm"] = warm.to_dict()
+        out["ok"] = True
+    except SanitizerError as e:
+        out["error"] = str(e)
+        out["ok"] = False
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="trace-discipline linter, jaxpr auditor and "
+                    "runtime dispatch sanitizer")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on any unbaselined violation (CI gate)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the full machine-readable report here")
+    ap.add_argument("--root", default="src/repro",
+                    help="tree to lint (default: src/repro)")
+    ap.add_argument("--baseline", default="ANALYSIS_BASELINE.txt",
+                    help="grandfathered-findings file")
+    ap.add_argument("--skip-engine", action="store_true",
+                    help="run only the AST pass (no JAX tracing)")
+    args = ap.parse_args(argv)
+
+    report = {"astlint": _astlint_section(args.root, args.baseline)}
+    if not args.skip_engine:
+        report["jaxpr"] = _jaxpr_section()
+        report["sanitizer"] = _sanitizer_section()
+    report["ok"] = all(sec.get("ok", True) for sec in report.values()
+                       if isinstance(sec, dict))
+
+    ast_sec = report["astlint"]
+    print(f"astlint: {ast_sec['n_findings']} finding(s), "
+          f"{len(ast_sec['new'])} new, "
+          f"{len(ast_sec['grandfathered'])} baselined")
+    for text in ast_sec["rendered"]:
+        print(text)
+    for fp in ast_sec["stale_baseline"]:
+        print(f"  stale baseline entry (remove it): {fp}")
+    if "jaxpr" in report:
+        jx = report["jaxpr"]
+        names = ", ".join(p["name"] for p in jx["programs"])
+        print(f"jaxprlint: {len(jx['programs'])} program(s) [{names}] "
+              + ("clean" if jx["ok"] else "VIOLATIONS"))
+        for v in jx["violations"]:
+            print(f"  {v}")
+    if "sanitizer" in report:
+        sz = report["sanitizer"]
+        if sz["ok"]:
+            print(f"sanitizer: cold {sz['cold']['dispatches']} dispatches "
+                  f"(contract {sz['cold']['contract']['max_dispatches']}), "
+                  f"warm {sz['warm']['recompiles']} recompiles, "
+                  f"{len(sz['cold']['transfers'])} implicit transfers")
+        else:
+            print(f"sanitizer: FAILED\n{sz['error']}")
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1, default=str)
+        print(f"wrote {args.json}")
+
+    if args.check and not report["ok"]:
+        print("analysis: FAILED", file=sys.stderr)
+        return 1
+    print("analysis: ok" if report["ok"]
+          else "analysis: violations found (informational mode; "
+               "use --check to fail)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

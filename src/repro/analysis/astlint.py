@@ -1,0 +1,693 @@
+"""Trace-discipline AST linter for the PICSOU engine (repo-specific).
+
+The engine's hot path is a handful of functions that execute *inside*
+``jax.jit`` / ``jax.lax.scan`` tracing — the chunk body, the superchunk
+scan, the protocol step. A single host synchronization (``.item()``,
+``np.asarray`` on a tracer, a Python ``if`` on a traced value) in one of
+them either fails at trace time in some configuration nobody tested, or
+— worse — silently breaks superchunk fusion by forcing a device sync
+per chunk. This linter finds those hazards statically.
+
+Trace contexts are discovered per module, without importing anything:
+
+* functions decorated with ``@jax.jit`` (directly or via
+  ``functools.partial(jax.jit, ...)``);
+* functions passed to ``jax.jit`` / ``jax.vmap`` / ``jax.lax.scan`` /
+  ``lax.cond`` / ``lax.while_loop`` / ``lax.fori_lax`` call sites —
+  including through arbitrary ``jax.vmap(...)`` nesting;
+* the *builder pattern* the engine uses everywhere: when the wrapped
+  argument is a call to a local function (``jax.jit(_build_run(spec))``),
+  every function nested directly inside that builder is a trace context;
+* anything transitively called (by module-local name) from the above.
+
+Rules (each finding carries the rule ID, a fix-it hint and supports
+``# analysis: ignore[rule-id]`` on the flagged line; ``ANALYSIS_BASELINE
+.txt`` grandfathers pre-existing findings by fingerprint):
+
+``host-sync``
+    ``.item()`` / ``float()`` / ``int()`` / ``bool()`` / ``np.asarray()``
+    / ``np.array()`` / ``jax.device_get()`` on a non-constant value
+    inside a trace context — a device->host sync (or a trace error).
+``tracer-branch``
+    Python ``if`` / ``while`` whose test reads values computed *inside*
+    a trace context (parameters or locals). Branching on closure
+    variables from the enclosing builder is fine — those are static at
+    trace time.
+``import-time-jnp``
+    A ``jnp.*`` call in module (or class) scope: it initializes the JAX
+    backend as an import side effect and freezes platform selection
+    before the caller can configure it.
+``missing-donate``
+    A ``jax.jit`` whose callee (transitively) carries ``lax.scan`` state
+    but declares no ``donate_argnums`` / ``donate_argnames`` — the scan
+    state is copied instead of aliased on every dispatch.
+``pytree-fields``
+    Inconsistent static-vs-traced pytree registration: a frozen (i.e.
+    hashable, compile-cache-key) dataclass declaring array-typed fields,
+    or a NamedTuple constructed inside a trace context declaring plain
+    ``int`` / ``float`` / ``bool`` / ``str`` fields.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["Finding", "RULES", "lint_source", "lint_paths", "lint_tree",
+           "load_baseline", "partition"]
+
+# rule-id -> (summary, fix-it hint)
+RULES: Dict[str, Tuple[str, str]] = {
+    "host-sync": (
+        "host synchronization on a traced value inside a trace context",
+        "keep the value on device (jnp ops) or move the host read to the "
+        "chunk-boundary drain; jax.device_get belongs in the host loop "
+        "only",
+    ),
+    "tracer-branch": (
+        "Python if/while on a tracer-valued expression",
+        "use jax.lax.cond / lax.select / jnp.where on traced values; "
+        "branch on builder closure values only",
+    ),
+    "import-time-jnp": (
+        "jnp call at module import time",
+        "use a plain Python constant, or build the array lazily inside "
+        "the function that needs it — import-time jnp calls initialize "
+        "the JAX backend before the caller can configure it",
+    ),
+    "missing-donate": (
+        "jax.jit over a scan-carrying callee without donate_argnums",
+        "declare donate_argnums for the scan-state argument so XLA "
+        "aliases input to output buffers (see simulator._donate_state)",
+    ),
+    "pytree-fields": (
+        "inconsistent static-vs-traced pytree field registration",
+        "frozen (compile-key) dataclasses must hold only hashable "
+        "static fields; NamedTuple state trees built under tracing must "
+        "annotate every field as an array",
+    ),
+}
+
+_IGNORE_RE = re.compile(r"#\s*analysis:\s*ignore\[([a-z\-,\s]+)\]")
+
+# callables that take a traceable function argument (positions given)
+_WRAPPER_FUNC_ARGS = {
+    "jax.jit": (0,), "jit": (0,),
+    "jax.vmap": (0,), "vmap": (0,),
+    "jax.pmap": (0,), "jax.grad": (0,), "jax.value_and_grad": (0,),
+    "jax.lax.scan": (0,), "lax.scan": (0,),
+    "jax.lax.map": (0,), "lax.map": (0,),
+    "jax.lax.cond": (1, 2), "lax.cond": (1, 2),
+    "jax.lax.while_loop": (0, 1), "lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,), "lax.fori_loop": (2,),
+    "jax.checkpoint": (0,), "jax.remat": (0,),
+}
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_SCAN_NAMES = {"jax.lax.scan", "lax.scan"}
+_ARRAY_ANNOT = ("jnp.ndarray", "jax.Array", "jnp.array", "np.ndarray",
+                "chex.Array", "Array", "ndarray", "ArrayLike")
+_STATIC_ANNOT = {"int", "float", "bool", "str", "bytes"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint finding: rule ID + location + hint + stable fingerprint."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    symbol: str          # enclosing function qualname, or flagged name
+    message: str
+
+    @property
+    def hint(self) -> str:
+        return RULES[self.rule][1]
+
+    def fingerprint(self) -> str:
+        """Line-number-free identity used by the baseline file."""
+        return f"{self.rule}::{self.path}::{self.symbol}"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: [{self.rule}] "
+                f"{self.message}\n    hint: {self.hint}")
+
+
+def _static_argnames(dec: ast.Call) -> Set[str]:
+    """Names declared static in a jit decorator call (literal tuples)."""
+    out: Set[str] = set()
+    for kw in dec.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for node in ast.walk(kw.value):
+                if (isinstance(node, ast.Constant)
+                        and isinstance(node.value, str)):
+                    out.add(node.value)
+    return out
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of a call target ('jax.lax.scan', ...)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class _Scope:
+    """One function (or module) scope: nested defs + locals."""
+
+    def __init__(self, node, parent: Optional["_Scope"], qualname: str):
+        self.node = node
+        self.parent = parent
+        self.qualname = qualname
+        self.defs: Dict[str, "_Scope"] = {}
+        self.locals: Set[str] = set()
+        self.static_names: Set[str] = set()   # jit static_argnames
+        self.is_trace = False
+
+    def resolve(self, name: str) -> Optional["_Scope"]:
+        scope: Optional[_Scope] = self
+        while scope is not None:
+            if name in scope.defs:
+                return scope.defs[name]
+            scope = scope.parent
+        return None
+
+
+class _ModuleLinter:
+    def __init__(self, tree: ast.Module, src: str, path: str):
+        self.tree = tree
+        self.path = path
+        self.lines = src.splitlines()
+        self.findings: List[Finding] = []
+        self.module = _Scope(tree, None, "<module>")
+        self._index_scopes(tree, self.module)
+
+    # -- scope index ----------------------------------------------------
+    def _index_scopes(self, node: ast.AST, scope: _Scope) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = (child.name if scope is self.module
+                        else f"{scope.qualname}.{child.name}")
+                sub = _Scope(child, scope, qual)
+                scope.defs[child.name] = sub
+                self._collect_locals(child, sub)
+                self._index_scopes(child, sub)
+            elif isinstance(child, ast.ClassDef):
+                # class bodies share the enclosing scope for resolution
+                self._index_scopes(child, scope)
+            elif isinstance(child, ast.Lambda):
+                self._index_scopes(child, scope)
+            else:
+                self._index_scopes(child, scope)
+
+    @staticmethod
+    def _collect_locals(fn, scope: _Scope) -> None:
+        args = fn.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs
+                  + ([args.vararg] if args.vararg else [])
+                  + ([args.kwarg] if args.kwarg else [])):
+            scope.locals.add(a.arg)
+        for sub in ast.walk(fn):
+            if sub is fn:
+                continue
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scope.locals.add(sub.name)
+                continue
+            if isinstance(sub, ast.Assign):
+                for tgt in sub.targets:
+                    for n in ast.walk(tgt):
+                        if isinstance(n, ast.Name):
+                            scope.locals.add(n.id)
+            elif isinstance(sub, (ast.AnnAssign, ast.AugAssign)):
+                if isinstance(sub.target, ast.Name):
+                    scope.locals.add(sub.target.id)
+            elif isinstance(sub, ast.NamedExpr):
+                if isinstance(sub.target, ast.Name):
+                    scope.locals.add(sub.target.id)
+            elif isinstance(sub, ast.For):
+                for n in ast.walk(sub.target):
+                    if isinstance(n, ast.Name):
+                        scope.locals.add(n.id)
+            elif isinstance(sub, ast.comprehension):
+                for n in ast.walk(sub.target):
+                    if isinstance(n, ast.Name):
+                        scope.locals.add(n.id)
+
+    # -- trace-context discovery ---------------------------------------
+    def _scope_of(self, node: ast.AST) -> _Scope:
+        """The innermost scope whose function contains ``node``."""
+        best = self.module
+        stack: List[Tuple[ast.AST, _Scope]] = [(self.tree, self.module)]
+        while stack:
+            cur, scope = stack.pop()
+            for child in ast.iter_child_nodes(cur):
+                sub = scope
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    sub = scope.defs.get(child.name, scope)
+                if child is node:
+                    return sub
+                stack.append((child, sub))
+        return best
+
+    def _mark_trace_roots(self) -> None:
+        # (a) decorated defs
+        for scope in self._all_scopes():
+            node = scope.node
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                name = _dotted(dec if not isinstance(dec, ast.Call)
+                               else dec.func)
+                if name in _JIT_NAMES:
+                    scope.is_trace = True
+                    if isinstance(dec, ast.Call):
+                        scope.static_names |= _static_argnames(dec)
+                if (isinstance(dec, ast.Call)
+                        and name in ("functools.partial", "partial")
+                        and dec.args
+                        and _dotted(dec.args[0]) in _JIT_NAMES):
+                    scope.is_trace = True
+                    scope.static_names |= _static_argnames(dec)
+        # (b) call-site wrapped functions, resolved in the *enclosing*
+        # scope of the call site (so `jax.lax.scan(step, ...)` inside a
+        # builder marks the builder-local `step`)
+        for call, scope in self._calls_with_scopes():
+            name = _dotted(call.func)
+            positions = _WRAPPER_FUNC_ARGS.get(name)
+            if positions is None:
+                continue
+            for pos in positions:
+                if pos < len(call.args):
+                    self._mark_callable_expr(call.args[pos], scope)
+
+    def _mark_callable_expr(self, expr: ast.AST, scope: _Scope) -> None:
+        if isinstance(expr, ast.Name):
+            target = scope.resolve(expr.id)
+            if target is not None:
+                target.is_trace = True
+        elif isinstance(expr, ast.Lambda):
+            # treated as part of the enclosing trace context; rules run
+            # over the whole function body anyway
+            pass
+        elif isinstance(expr, ast.Call):
+            inner = _dotted(expr.func)
+            if inner in _WRAPPER_FUNC_ARGS:     # jax.vmap(fn) nesting
+                for pos in _WRAPPER_FUNC_ARGS[inner]:
+                    if pos < len(expr.args):
+                        self._mark_callable_expr(expr.args[pos], scope)
+            else:
+                # builder pattern: jit(_build_chunk(...)) — everything
+                # defined directly inside the builder is trace code
+                builder = (scope.resolve(inner)
+                           if inner and "." not in inner else None)
+                if builder is not None:
+                    for sub in builder.defs.values():
+                        sub.is_trace = True
+
+    def _propagate_trace(self) -> None:
+        changed = True
+        while changed:
+            changed = False
+            for scope in self._all_scopes():
+                if not scope.is_trace:
+                    continue
+                for call in ast.walk(scope.node):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    if isinstance(call.func, ast.Name):
+                        callee = scope.resolve(call.func.id)
+                        if callee is not None and not callee.is_trace:
+                            callee.is_trace = True
+                            changed = True
+
+    def _all_scopes(self) -> Iterable[_Scope]:
+        stack = [self.module]
+        while stack:
+            s = stack.pop()
+            yield s
+            stack.extend(s.defs.values())
+
+    def _calls_with_scopes(self):
+        out = []
+        stack: List[Tuple[ast.AST, _Scope]] = [(self.tree, self.module)]
+        while stack:
+            node, scope = stack.pop()
+            for child in ast.iter_child_nodes(node):
+                sub = scope
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    sub = scope.defs.get(child.name, scope)
+                if isinstance(child, ast.Call):
+                    out.append((child, sub))
+                stack.append((child, sub))
+        return out
+
+    # -- suppression ----------------------------------------------------
+    def _suppressed(self, rule: str, line: int) -> bool:
+        if 1 <= line <= len(self.lines):
+            m = _IGNORE_RE.search(self.lines[line - 1])
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",")}
+                return rule in rules or "all" in rules
+        return False
+
+    def _emit(self, rule: str, node: ast.AST, symbol: str,
+              message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        if self._suppressed(rule, line):
+            return
+        self.findings.append(Finding(
+            rule=rule, path=self.path, line=line,
+            col=getattr(node, "col_offset", 0), symbol=symbol,
+            message=message))
+
+    # -- rules ----------------------------------------------------------
+    def run(self) -> List[Finding]:
+        self._mark_trace_roots()
+        self._propagate_trace()
+        self._rule_import_time_jnp()
+        self._rule_missing_donate()
+        self._rule_pytree_fields()
+        for scope in self._all_scopes():
+            if scope.is_trace:
+                self._rules_in_trace(scope)
+        self.findings.sort(key=lambda f: (f.path, f.line, f.col))
+        return self.findings
+
+    def _rules_in_trace(self, scope: _Scope) -> None:
+        fn = scope.node
+        nested = {s.node for s in scope.defs.values()}
+        # walk this function's own statements only (nested defs get
+        # their own pass when they are trace contexts themselves)
+        for node in self._walk_own(fn, nested):
+            if isinstance(node, ast.Call):
+                self._check_host_sync(node, scope)
+            elif isinstance(node, (ast.If, ast.While)):
+                self._check_tracer_branch(node, scope)
+
+    @staticmethod
+    def _walk_own(fn, nested_defs) -> Iterable[ast.AST]:
+        stack = list(ast.iter_child_nodes(fn))
+        while stack:
+            node = stack.pop()
+            if node in nested_defs:
+                continue
+            yield node
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _check_host_sync(self, call: ast.Call, scope: _Scope) -> None:
+        name = _dotted(call.func)
+        if (isinstance(call.func, ast.Attribute)
+                and call.func.attr == "item" and not call.args):
+            self._emit("host-sync", call, scope.qualname,
+                       ".item() forces a device->host sync inside a "
+                       "trace context")
+            return
+        if name in ("np.asarray", "np.array", "numpy.asarray",
+                    "numpy.array", "onp.asarray", "onp.array"):
+            self._emit("host-sync", call, scope.qualname,
+                       f"{name}() materializes a traced value on the "
+                       f"host inside a trace context")
+            return
+        if name in ("jax.device_get", "device_get"):
+            self._emit("host-sync", call, scope.qualname,
+                       "jax.device_get() inside a trace context — the "
+                       "host drain belongs in the chunk-boundary loop")
+            return
+        if (isinstance(call.func, ast.Name)
+                and call.func.id in ("float", "int", "bool")
+                and call.args
+                and not isinstance(call.args[0], ast.Constant)):
+            self._emit("host-sync", call, scope.qualname,
+                       f"{call.func.id}() on a non-constant value "
+                       f"concretizes a tracer inside a trace context")
+
+    @staticmethod
+    def _static_comparison(test: ast.AST) -> bool:
+        """True when the test can only be a static (trace-time) branch.
+
+        Comparisons whose right-hand sides are string / ``None``
+        literals (or containers of them) are static by construction —
+        comparing a tracer against a string would not compile at all,
+        so ``if kind == "rwkv"`` is config dispatch, not data-dependent
+        control flow. ``isinstance`` tests are likewise static.
+        """
+        comparisons = [n for n in ast.walk(test)
+                       if isinstance(n, ast.Compare)]
+        names_in_compares: Set[int] = set()
+        for cmp_node in comparisons:
+            static_rhs = True
+            for comparator in cmp_node.comparators:
+                consts = [c for c in ast.walk(comparator)
+                          if isinstance(c, ast.Constant)]
+                if not consts or not all(
+                        isinstance(c.value, (str, bytes))
+                        or c.value is None for c in consts):
+                    static_rhs = False
+            if static_rhs:
+                for n in ast.walk(cmp_node):
+                    names_in_compares.add(id(n))
+        for n in ast.walk(test):
+            if (isinstance(n, ast.Call)
+                    and _dotted(n.func) == "isinstance"):
+                for sub in ast.walk(n):
+                    names_in_compares.add(id(sub))
+        # static iff every Name occurrence is inside a static compare
+        for n in ast.walk(test):
+            if isinstance(n, ast.Name) and id(n) not in names_in_compares:
+                return False
+        return True
+
+    def _check_tracer_branch(self, node, scope: _Scope) -> None:
+        if self._static_comparison(node.test):
+            return
+        suspect = []
+        for sub in ast.walk(node.test):
+            if (isinstance(sub, ast.Name) and sub.id in scope.locals
+                    and sub.id not in scope.static_names):
+                suspect.append(sub.id)
+        if suspect:
+            kw = "if" if isinstance(node, ast.If) else "while"
+            self._emit("tracer-branch", node, scope.qualname,
+                       f"Python {kw} on {', '.join(sorted(set(suspect)))} "
+                       f"— locals of a trace context are traced values; "
+                       f"control flow must be lax.cond/select")
+
+    def _rule_import_time_jnp(self) -> None:
+        def scan_body(body, where: str) -> None:
+            for stmt in body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if isinstance(stmt, ast.ClassDef):
+                    scan_body(stmt.body, stmt.name)
+                    continue
+                for node in ast.walk(stmt):
+                    if isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef, ast.Lambda)):
+                        break
+                    if isinstance(node, ast.Call):
+                        name = _dotted(node.func)
+                        if name.startswith(("jnp.", "jax.numpy.")):
+                            target = name
+                            self._emit(
+                                "import-time-jnp", node,
+                                f"{where}:{name}",
+                                f"{target}() runs at import time and "
+                                f"initializes the JAX backend as a side "
+                                f"effect")
+
+        scan_body(self.tree.body, "<module>")
+
+    def _reaches_scan(self, scope: _Scope, seen=None) -> bool:
+        if seen is None:
+            seen = set()
+        if scope in seen:
+            return False
+        seen.add(scope)
+        for node in ast.walk(scope.node):
+            if isinstance(node, ast.Call):
+                if _dotted(node.func) in _SCAN_NAMES:
+                    return True
+                if isinstance(node.func, ast.Name):
+                    callee = scope.resolve(node.func.id)
+                    if callee is not None and self._reaches_scan(callee,
+                                                                 seen):
+                        return True
+        for sub in scope.defs.values():
+            if self._reaches_scan(sub, seen):
+                return True
+        return False
+
+    def _callee_scopes(self, expr: ast.AST,
+                       scope: _Scope) -> List[_Scope]:
+        """Scopes a jit-wrapped argument expression may execute."""
+        if isinstance(expr, ast.Name):
+            target = scope.resolve(expr.id)
+            return [target] if target is not None else []
+        if isinstance(expr, ast.Call):
+            name = _dotted(expr.func)
+            if name in _WRAPPER_FUNC_ARGS:
+                out: List[_Scope] = []
+                for pos in _WRAPPER_FUNC_ARGS[name]:
+                    if pos < len(expr.args):
+                        out.extend(self._callee_scopes(expr.args[pos],
+                                                       scope))
+                return out
+            if name and "." not in name:
+                builder = scope.resolve(name)
+                if builder is not None:
+                    return list(builder.defs.values()) or [builder]
+        return []
+
+    def _rule_missing_donate(self) -> None:
+        for call, scope in self._calls_with_scopes():
+            if _dotted(call.func) not in _JIT_NAMES or not call.args:
+                continue
+            kwargs = {kw.arg for kw in call.keywords}
+            if kwargs & {"donate_argnums", "donate_argnames"}:
+                continue
+            callees = self._callee_scopes(call.args[0], scope)
+            if any(self._reaches_scan(c) for c in callees):
+                sym = (callees[0].qualname if callees
+                       else scope.qualname)
+                self._emit("missing-donate", call,
+                           f"{scope.qualname}->{sym}",
+                           f"jax.jit over scan-carrying '{sym}' without "
+                           f"donate_argnums — scan state is copied, not "
+                           f"aliased, on every dispatch")
+
+    def _rule_pytree_fields(self) -> None:
+        trace_names = {s.node.name for s in self._all_scopes()
+                       if s.is_trace and isinstance(
+                           s.node, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        constructed_in_trace: Set[str] = set()
+        for scope in self._all_scopes():
+            if not scope.is_trace:
+                continue
+            for node in ast.walk(scope.node):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Name)):
+                    constructed_in_trace.add(node.func.id)
+        del trace_names
+
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            is_frozen_dc = False
+            for dec in node.decorator_list:
+                name = _dotted(dec if not isinstance(dec, ast.Call)
+                               else dec.func)
+                if name in ("dataclasses.dataclass", "dataclass"):
+                    if isinstance(dec, ast.Call):
+                        for kw in dec.keywords:
+                            if (kw.arg == "frozen"
+                                    and isinstance(kw.value, ast.Constant)
+                                    and kw.value.value is True):
+                                is_frozen_dc = True
+            is_namedtuple = any(_dotted(b) in ("NamedTuple",
+                                               "typing.NamedTuple")
+                                for b in node.bases)
+            if is_frozen_dc:
+                for stmt in node.body:
+                    if (isinstance(stmt, ast.AnnAssign)
+                            and isinstance(stmt.target, ast.Name)):
+                        annot = ast.unparse(stmt.annotation)
+                        if any(a in annot for a in _ARRAY_ANNOT):
+                            self._emit(
+                                "pytree-fields", stmt,
+                                f"{node.name}.{stmt.target.id}",
+                                f"frozen dataclass {node.name} declares "
+                                f"array-typed field "
+                                f"'{stmt.target.id}: {annot}' — a frozen "
+                                f"spec is a compile-cache key and must "
+                                f"hold only hashable static fields")
+            if is_namedtuple and node.name in constructed_in_trace:
+                for stmt in node.body:
+                    if (isinstance(stmt, ast.AnnAssign)
+                            and isinstance(stmt.target, ast.Name)):
+                        annot = ast.unparse(stmt.annotation)
+                        if annot in _STATIC_ANNOT:
+                            self._emit(
+                                "pytree-fields", stmt,
+                                f"{node.name}.{stmt.target.id}",
+                                f"NamedTuple {node.name} is constructed "
+                                f"inside a trace context but field "
+                                f"'{stmt.target.id}: {annot}' is "
+                                f"annotated static — traced leaves must "
+                                f"be arrays")
+
+
+def lint_source(src: str, path: str = "<string>") -> List[Finding]:
+    """Lint one module's source text; returns sorted findings."""
+    tree = ast.parse(src, filename=path)
+    return _ModuleLinter(tree, src, path).run()
+
+
+def _canonical_path(p: str) -> str:
+    """Repo-relative form of ``p`` so baseline fingerprints are stable
+    regardless of the invocation cwd or an absolute ``--root``: anchor
+    on the last ``src/`` path component when present (the repo layout),
+    else fall back to a plain cwd-relative path."""
+    norm = os.path.normpath(p).replace(os.sep, "/")
+    head, sep, tail = norm.rpartition("/src/")
+    if sep:
+        return "src/" + tail
+    if norm.startswith("src/"):
+        return norm
+    return os.path.relpath(p).replace(os.sep, "/")
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    for p in paths:
+        with open(p, "r") as f:
+            src = f.read()
+        findings.extend(lint_source(src, _canonical_path(p)))
+    return findings
+
+
+def lint_tree(root: str) -> List[Finding]:
+    """Lint every ``*.py`` under ``root`` (skipping this package)."""
+    paths = []
+    skip = os.path.join("repro", "analysis")
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                full = os.path.join(dirpath, fn)
+                if skip in full:
+                    continue    # the linter does host work by design
+                paths.append(full)
+    return lint_paths(sorted(paths))
+
+
+def load_baseline(path: str) -> Set[str]:
+    """Fingerprints grandfathered by the checked-in baseline file."""
+    if not os.path.exists(path):
+        return set()
+    out: Set[str] = set()
+    with open(path, "r") as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                out.add(line.split(" #")[0].strip())
+    return out
+
+
+def partition(findings: Iterable[Finding],
+              baseline: Set[str]) -> Tuple[List[Finding], List[Finding]]:
+    """Split findings into (new, grandfathered-by-baseline)."""
+    new, old = [], []
+    for f in findings:
+        (old if f.fingerprint() in baseline else new).append(f)
+    return new, old

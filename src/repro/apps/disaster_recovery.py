@@ -40,7 +40,7 @@ import numpy as np
 from ..core.gc import snap_to_boundary
 from ..core.types import FailureScenario, RSMConfig, SimConfig
 from ..replay.trace import Injection as _Injection
-from ..topology import (Topology, TopologyResult, RefTopologyResult,
+from ..topology import (RefTopologyResult, Topology, TopologyResult,
                         link_specs, run_topology, run_topology_reference)
 
 __all__ = ["RecoveryReport", "run_disaster_recovery"]

@@ -28,8 +28,8 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core.types import FailureScenario, RSMConfig, SimConfig
-from ..topology import (LinkSpec, Topology, TopologyResult,
-                        RefTopologyResult, run_topology,
+from ..topology import (LinkSpec, RefTopologyResult, Topology,
+                        TopologyResult, run_topology,
                         run_topology_reference)
 
 __all__ = ["ReconciliationReport", "lww_merge", "run_reconciliation"]

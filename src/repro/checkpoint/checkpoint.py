@@ -16,7 +16,7 @@ import queue
 import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np

@@ -7,7 +7,9 @@ Importing this package registers all configs; use
 from .base import (SHAPES, ModelConfig, ShapeSpec, get_config, list_configs,
                    register, shape_applicable)
 
-# Import for registration side effects (one module per assigned arch).
+# Import for registration side effects (one module per assigned arch);
+# kept as one visually grouped block rather than isort-merged.
+# isort: off
 from . import granite_34b        # noqa: F401
 from . import qwen2_72b          # noqa: F401
 from . import granite_8b         # noqa: F401
@@ -18,6 +20,7 @@ from . import mixtral_8x22b      # noqa: F401
 from . import rwkv6_7b           # noqa: F401
 from . import whisper_small      # noqa: F401
 from . import llama32_vision_11b  # noqa: F401
+# isort: on
 
 __all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "get_config",
            "list_configs", "register", "shape_applicable"]

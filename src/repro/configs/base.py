@@ -9,7 +9,7 @@ allocation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 __all__ = ["ModelConfig", "ShapeSpec", "register", "get_config",
            "list_configs", "SHAPES", "shape_applicable"]

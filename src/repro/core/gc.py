@@ -20,9 +20,8 @@ from __future__ import annotations
 
 from typing import Optional
 
-import numpy as np
-
 import jax.numpy as jnp
+import numpy as np
 
 from .quack import weighted_quorum_prefix
 

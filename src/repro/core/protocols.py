@@ -17,7 +17,7 @@ RSM (n_r - 1 copies); ATA needs no intra-RSM broadcast.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 from .network import NodeLoad, Resources, throughput_from_loads
 from .simulator import (SimResult, SimSpec, build_spec, run_simulation,
@@ -128,7 +128,8 @@ def analytic_throughput(protocol: str, sender_cfg: RSMConfig,
     return throughput_from_loads(res, net)
 
 
-def staked_picsou_throughput(stakes, nic_Bps, net: NetworkModel) -> Dict[str, float]:
+def staked_picsou_throughput(stakes, nic_Bps,
+                             net: NetworkModel) -> Dict[str, float]:
     """Stake-aware PICSOU capacity (§6.3 scenarios).
 
     DSS apportions send/receive work proportional to stake, so replica i

@@ -26,7 +26,6 @@ programs.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 __all__ = [

@@ -17,7 +17,7 @@ the hot data-plane state transitions stay in JAX).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 
@@ -155,7 +155,8 @@ def receiver_for(sender_seq: np.ndarray, n_r: int,
     identifies senders and receivers identically, §5.2).
     """
     n_msgs = sender_seq.shape[0]
-    if scheduler in ("dss", "skewed_rr", "lottery") and recv_stakes is not None:
+    if (scheduler in ("dss", "skewed_rr", "lottery")
+            and recv_stakes is not None):
         base = sender_assignment(scheduler, recv_stakes, n_msgs,
                                  quantum=quantum, seed=seed)
         return base

@@ -77,8 +77,8 @@ from .quack import (claim_bitmask, missing_below_horizon,
 from .snapshot import (WINDOW_FILLS as _WINDOW_FILLS, device_state,
                        host_state, pad_window, window_shapes
                        as _window_shapes)
-from .types import (COUNTER_BYTES, MAC_BYTES, SEQNO_BYTES, FailureScenario,
-                    NetworkModel, RSMConfig, SimConfig, lcm_scale_factors)
+from .types import (FailureScenario, RSMConfig, SimConfig,
+                    lcm_scale_factors)
 
 __all__ = ["SimSpec", "SimResult", "FailArrays", "build_spec",
            "run_simulation", "run_simulation_batch",
@@ -86,9 +86,11 @@ __all__ = ["SimSpec", "SimResult", "FailArrays", "build_spec",
            "spec_failures", "spec_with_failures", "chunk_trace_count",
            "chunk_dispatch_count", "host_sync_count"]
 
-NEVER = jnp.int32(-1)
+# plain Python ints, not jnp scalars: a module-level jnp call would
+# initialize the JAX backend at import time (analysis: import-time-jnp);
+# weak-typed ints promote to int32 inside the step exactly the same.
 _NEVER_STEP = 2 ** 30     # orig_step pad for window slots beyond the stream
-_BIG = jnp.int32(2 ** 30)
+_BIG = 2 ** 30
 
 
 @dataclasses.dataclass(frozen=True)
@@ -358,10 +360,10 @@ def build_spec(sender: RSMConfig, receiver: RSMConfig,
         psi_s, psi_r = (lcm_scale_factors(st_s.sum(), st_r.sum())
                         if use_lcm_scaling else (1.0, 1.0))
         # quota each replica proportional to (scaled) stake, smoothed.
-        q_s = max(n_s, min(4 * n_s, int(np.ceil(st_s.sum() * psi_s
-                                                / max(st_s.min() * psi_s, 1)))))
-        q_r = max(n_r, min(4 * n_r, int(np.ceil(st_r.sum() * psi_r
-                                                / max(st_r.min() * psi_r, 1)))))
+        q_s = max(n_s, min(4 * n_s, int(np.ceil(
+            st_s.sum() * psi_s / max(st_s.min() * psi_s, 1)))))
+        q_r = max(n_r, min(4 * n_r, int(np.ceil(
+            st_r.sum() * psi_r / max(st_r.min() * psi_r, 1)))))
         rs_seq = sched.dss_sequence(st_s * psi_s, q_s, q_s)
         rr_seq = sched.dss_sequence(st_r * psi_r, q_r, q_r)
 
@@ -991,8 +993,9 @@ def run_simulation(spec: SimSpec) -> SimResult:
     if spec.window_slots:
         return _run_windowed(spec)
     final, ms = _compiled_sim(_neutral(spec))(_fail_arrays(spec))
-    final = _np_state(final)
-    ms = jax.tree_util.tree_map(np.asarray, ms)
+    # one explicit batched fetch — per-leaf np.asarray here is an
+    # implicit d2h transfer the analysis sanitizer rejects
+    final, ms = jax.device_get((final, ms))
     return SimResult(
         spec=spec,
         metrics=StepMetrics(*ms),
@@ -1014,8 +1017,7 @@ def _stacked_fails(specs: Sequence[SimSpec]) -> FailArrays:
 def _run_dense_batch(specs: List[SimSpec]) -> List[SimResult]:
     nspec = _neutral(specs[0])
     finals, ms = _compiled_batch(nspec)(_stacked_fails(specs))
-    finals = _np_state(finals)
-    ms = jax.tree_util.tree_map(np.asarray, ms)
+    finals, ms = jax.device_get((finals, ms))
     out = []
     for b, spec in enumerate(specs):
         out.append(SimResult(
@@ -1072,6 +1074,30 @@ def _run_windowed_batch(specs: List[SimSpec], commit_floors=None, *,
                         fail_schedule=None, recorder=None,
                         resume: Optional[ChunkCheckpoint] = None,
                         ) -> List[SimResult]:
+    """Windowed batch entry point; see ``_run_windowed_batch_impl``.
+
+    When ``SimConfig.debug_checks`` is set the whole run executes under
+    the analysis sanitizer's :func:`repro.analysis.engine_guard`: any
+    implicit device->host materialization in the drain / checkpoint /
+    final-flush path (a ``np.asarray`` on a ``jax.Array`` outside
+    ``jax.device_get``) raises ``SanitizerError`` instead of silently
+    serializing the pipeline.
+    """
+    if specs and specs[0].debug_checks:
+        from ..analysis.sanitizer import engine_guard
+        with engine_guard():
+            return _run_windowed_batch_impl(
+                specs, commit_floors, fail_schedule=fail_schedule,
+                recorder=recorder, resume=resume)
+    return _run_windowed_batch_impl(
+        specs, commit_floors, fail_schedule=fail_schedule,
+        recorder=recorder, resume=resume)
+
+
+def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
+                             fail_schedule=None, recorder=None,
+                             resume: Optional[ChunkCheckpoint] = None,
+                             ) -> List[SimResult]:
     """Batched windowed sweep: per-scenario failure masks AND window bases.
 
     The vmapped chunk rotates each scenario's ring buffers at its own GC

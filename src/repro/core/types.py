@@ -61,13 +61,15 @@ class RSMConfig:
             raise ValueError("u, r must be non-negative")
 
     @classmethod
-    def bft(cls, f: int, stakes: Optional[Sequence[float]] = None) -> "RSMConfig":
+    def bft(cls, f: int,
+            stakes: Optional[Sequence[float]] = None) -> "RSMConfig":
         """3f+1 BFT RSM (u = r = f)."""
         return cls(n=3 * f + 1, u=f, r=f,
                    stakes=tuple(stakes) if stakes is not None else None)
 
     @classmethod
-    def cft(cls, f: int, stakes: Optional[Sequence[float]] = None) -> "RSMConfig":
+    def cft(cls, f: int,
+            stakes: Optional[Sequence[float]] = None) -> "RSMConfig":
         """2f+1 CFT RSM (u = f, r = 0)."""
         return cls(n=2 * f + 1, u=f, r=0,
                    stakes=tuple(stakes) if stakes is not None else None)
@@ -152,7 +154,8 @@ class FailureScenario:
                               direction).  Shape (n_s,) bool.
     byz_recv_drop:            receiver drops direct cross-RSM messages (does
                               not store/bcast/ack them). Shape (n_r,) bool.
-    byz_ack_advance:          receiver lies: acks +adv beyond truth. (n_r,) int.
+    byz_ack_advance:          receiver lies: acks +adv beyond truth.
+                              Shape (n_r,) int.
     byz_ack_low:              receiver lies: always acks 0. (n_r,) bool.
     byz_bcast_partial:        receiver broadcasts only to the first
                               ``bcast_limit`` replicas (the §4.3 GC-stall
@@ -176,7 +179,7 @@ class FailureScenario:
     @classmethod
     def crash_fraction(cls, n_s: int, n_r: int, frac: float,
                        seed: int = 0, at_step: int = 0) -> "FailureScenario":
-        """Paper §6.2: randomly fail ``frac`` of replicas (they send nothing)."""
+        """Paper §6.2: randomly fail ``frac`` of replicas (send nothing)."""
         rng = np.random.RandomState(seed)
         ks = max(0, min(int(round(frac * n_s)), n_s - 1))
         kr = max(0, min(int(round(frac * n_r)), n_r - 1))
@@ -237,9 +240,13 @@ class SimConfig:
                      restores the fully synchronous per-chunk loop
                      (dispatch, block, drain).
     debug_checks:    enable per-drain host-side invariant checks (the
-                     window-base mirror vs the in-graph rotation). Off by
-                     default so steady-state drains never block on a
-                     consistency assertion; turned on in tests.
+                     window-base mirror vs the in-graph rotation) AND
+                     run the whole windowed batch under the analysis
+                     sanitizer's ``engine_guard`` (``repro.analysis``),
+                     which raises on any implicit device->host transfer
+                     in the drain path. Off by default so steady-state
+                     drains never block on a consistency assertion;
+                     turned on in tests.
     use_pallas_quack: route the stake-weighted QUACK/loss quorum bitmaps
                      (the protocol's compute hot loop) through the
                      Pallas TPU kernel ``kernels.quack_scan`` instead of

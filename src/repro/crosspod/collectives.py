@@ -27,13 +27,12 @@ and verified equal to each other and to the unsharded mean in tests.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["picsou_cross_pod_sync", "ata_cross_pod_sync",
            "dcn_bytes_analytic"]

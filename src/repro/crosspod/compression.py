@@ -10,7 +10,7 @@ gradient, standard EF-SGD).
 
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

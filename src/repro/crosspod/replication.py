@@ -21,7 +21,7 @@ pods over DCN:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set
 
 import numpy as np
 
@@ -109,7 +109,7 @@ class ReplicationLedger:
         self.dup_counts.pop(shard_id, None)
         return (st.origin_host + st.retries) % self.n
 
-    # -- GC-stall defence ------------------------------------------------------
+    # -- GC-stall defence -------------------------------------------------
     def highest_quacked(self) -> int:
         hq = -1
         for sid in sorted(self.shards):

@@ -12,7 +12,7 @@ Tokens follow a Zipf-like marginal with a deterministic mixing hash
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

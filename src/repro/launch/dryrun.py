@@ -28,7 +28,6 @@ import json
 import time
 import traceback
 
-import jax
 
 
 def apply_opts(cfg, opts: str):

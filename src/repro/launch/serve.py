@@ -17,7 +17,6 @@ import numpy as np
 from ..configs import get_config
 from ..data import SyntheticTokens
 from ..models import decode_step, init_model, prefill
-from .mesh import make_mesh
 from .train import parse_mesh
 
 

@@ -9,18 +9,16 @@ materialized params.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig, ShapeSpec
 from ..models import model as M
 from ..models.sharding import (DEFAULT_RULES, activation_sharding,
-                               sharding_for, spec_for)
-from ..optim import (AdamWConfig, adamw_init, adamw_update, cosine_schedule,
+                               sharding_for)
+from ..optim import (AdamWConfig, adamw_update, cosine_schedule,
                      opt_state_specs)
 
 __all__ = ["rules_for", "param_shardings", "build_train_step",

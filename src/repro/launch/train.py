@@ -21,17 +21,13 @@ Example:
 """
 
 import argparse
-import functools
-import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..checkpoint import CheckpointManager, restore_tree
-from ..configs import SHAPES, get_config
+from ..configs import get_config
 from ..configs.base import ShapeSpec
 from ..crosspod import (ata_cross_pod_sync, ef_int8_compress,
                         ef_int8_decompress, make_ef_state,

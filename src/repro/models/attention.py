@@ -18,8 +18,6 @@ All support GQA by folding query-head groups onto KV heads.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -28,10 +28,10 @@ boundaries; this package turns that into an experimentation engine:
     ])
 """
 
-from .trace import Injection, RunTrace, TraceRecorder
+from .oracle import replay_oracle, replay_topology_oracle
 from .replay import (record_batch, record_simulation, record_topology,
                      replay, replay_topology)
-from .oracle import (replay_oracle, replay_topology_oracle)
+from .trace import Injection, RunTrace, TraceRecorder
 from .whatif import ForkOutcome, ForkSpec, WhatIfReport, fork_whatif
 
 __all__ = [

@@ -25,8 +25,8 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 from ..core.simulator import (SimResult, SimSpec, _run_windowed_batch,
                               spec_failures, spec_with_failures)
 from ..core.types import FailureScenario
-from ..topology.engine import (_floor_plan, link_specs, run_topology,
-                               TopologyResult)
+from ..topology.engine import (TopologyResult, _floor_plan, link_specs,
+                               run_topology)
 from ..topology.graph import Topology
 from .trace import Injection, RunTrace, TraceRecorder
 

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 __all__ = ["parse_collectives", "collective_bytes_from_hlo", "CollectiveOp"]
 
@@ -114,7 +114,8 @@ def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
             # (result/g) g-1 times
             wire = (n / max(g, 1)) * (g - 1)
         elif matched == "reduce-scatter":
-            # operand = result * g; each chip sends operand*(g-1)/g = result*(g-1)
+            # operand = result * g; each chip sends
+            # operand*(g-1)/g = result*(g-1)
             wire = float(n) * (g - 1)
         elif matched == "all-to-all":
             wire = float(n) * (g - 1) / max(g, 1)

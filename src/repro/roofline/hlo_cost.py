@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 __all__ = ["analyze_hlo_text", "HloCost"]
 
@@ -35,16 +35,20 @@ _DTYPE_BYTES = {
     "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
 }
 
-_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_COMP_HEADER = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
 _OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
-_TYPE_RE = re.compile(r"^(\([^)]*\)|[\w\[\],\s]+?\[[\d,]*\](?:\{[^}]*\})?)\s+(\S+?)\(")
+_TYPE_RE = re.compile(
+    r"^(\([^)]*\)|[\w\[\],\s]+?\[[\d,]*\](?:\{[^}]*\})?)\s+(\S+?)\(")
 _SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
 _TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
 _CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
 _APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
-_BRANCH_RE = re.compile(r"(?:true_computation|false_computation|branch_computations=\{[^}]*)")
+_BRANCH_RE = re.compile(
+    r"(?:true_computation|false_computation"
+    r"|branch_computations=\{[^}]*)")
 _OPERAND_RE = re.compile(r"%([\w\.\-]+)")
 _LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]")

@@ -16,7 +16,6 @@ import dataclasses
 from typing import Dict, Optional
 
 from ..configs.base import ModelConfig, ShapeSpec
-from .hlo import collective_bytes_from_hlo
 from .hlo_cost import analyze_hlo_text
 
 __all__ = ["HW", "RooflineReport", "analyze_compiled", "roofline_terms",

@@ -36,8 +36,8 @@ from typing import Dict, List
 
 import numpy as np
 
-from ..core.simulator import (SimResult, SimSpec, build_spec,
-                              require_uniform_batch, _run_windowed_batch)
+from ..core.simulator import (SimResult, SimSpec, _run_windowed_batch,
+                              build_spec, require_uniform_batch)
 from .graph import LinkSpec, Topology
 
 __all__ = ["LinkAccessors", "TopologyAccessors", "LinkResult",

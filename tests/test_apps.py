@@ -8,15 +8,14 @@ the most-caught-up backup, convergence to the elected log, stores merge
 to equality) are then asserted on top.
 """
 
-import copy
 import dataclasses
 
 import numpy as np
 import pytest
 
+from repro.apps import (lww_merge, run_disaster_recovery,
+                        run_reconciliation)
 from repro.core import FailureScenario, RSMConfig, SimConfig
-from repro.apps import (run_disaster_recovery, run_reconciliation,
-                        lww_merge)
 
 BFT1 = RSMConfig.bft(1)
 CFT1 = RSMConfig.cft(1)

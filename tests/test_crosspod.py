@@ -4,10 +4,8 @@ import numpy as np
 import pytest
 
 from helpers import run_py
-
 from repro.crosspod import (ReplicationLedger, dcn_bytes_analytic,
-                            ef_int8_compress, ef_int8_decompress,
-                            make_ef_state)
+                            ef_int8_compress, ef_int8_decompress)
 
 
 def test_sync_schedules_agree():

@@ -20,8 +20,7 @@ import pytest
 
 from repro.core import FailureScenario, RSMConfig, SimConfig
 from repro.core.quack import stake_quorum_bitmap
-from repro.core.simulator import (build_spec, chunk_dispatch_count,
-                                  host_sync_count, run_simulation,
+from repro.core.simulator import (build_spec, run_simulation,
                                   run_simulation_batch)
 
 BFT1 = RSMConfig.bft(1)
@@ -98,28 +97,33 @@ def test_superchunk_batch_bit_identical():
 def test_dispatch_and_sync_counts_shrink():
     """The CI acceptance observable: at K = 8 the engine issues ~K×
     fewer device dispatches and host syncs than the synchronous loop —
-    asserted on deterministic counters, not wall time."""
+    asserted via the analysis sanitizer's declarative contract
+    (``<= ceil(C/K) + 2`` dispatches, 0 implicit transfers, 0 warm
+    recompiles), on deterministic counters, not wall time."""
+    from repro.analysis import dispatch_contract, sanitized
+
     simkw = dict(n_msgs=512, steps=512 // 4 + 40, window=1, phi=6,
                  window_slots=256, chunk_steps=4)
     s1 = _spec(simkw, FailureScenario.none(), 1)
     s8 = _spec(simkw, FailureScenario.none(), 8)
     run_simulation(s1), run_simulation(s8)      # warm both programs
 
-    d0, h0 = chunk_dispatch_count(), host_sync_count()
-    r1 = run_simulation(s1)
-    d1, h1 = chunk_dispatch_count() - d0, host_sync_count() - h0
-    d0, h0 = chunk_dispatch_count(), host_sync_count()
-    r8 = run_simulation(s8)
-    d8, h8 = chunk_dispatch_count() - d0, host_sync_count() - h0
+    # warm=True adds the zero-recompilation clause; sanitized() raises
+    # on any violated ceiling, transfers and syncs included
+    with sanitized(dispatch_contract(s1, warm=True)) as rep1:
+        r1 = run_simulation(s1)
+    with sanitized(dispatch_contract(s8, warm=True)) as rep8:
+        r8 = run_simulation(s8)
 
     _assert_same(r1, r8)
     n_chunks = -(-s1.steps // s1.chunk_steps)
-    assert d1 == n_chunks                       # sync loop: 1 per chunk
+    assert rep1.dispatches == n_chunks          # sync loop: 1 per chunk
     # fused: ~steps/(K*chunk) (+1 for the final unrotated chunk and a
-    # partial tail span); "~K×" with real slack for span fragmentation
-    assert d8 <= -(-n_chunks // 8) + 3, (d1, d8)
-    assert h8 <= d8 + 2                          # one drain per dispatch
-    assert h1 >= n_chunks                        # sync: one per chunk
+    # partial tail span) — the same ceiling the contract enforces
+    assert rep8.dispatches <= -(-n_chunks // 8) + 2, rep8.to_dict()
+    assert rep8.host_syncs <= rep8.dispatches + 2   # one drain/dispatch
+    assert rep1.host_syncs >= n_chunks              # sync: one per chunk
+    assert rep1.transfers == () and rep8.transfers == ()
 
 
 def test_async_drain_overlap_engages():

@@ -1,8 +1,6 @@
 """Unit tests for the QUACK primitives (§4.1, §5.1)."""
 
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core.quack import (claim_bitmask, cumulative_ack,
                               missing_below_horizon, selective_quack,

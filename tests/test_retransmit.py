@@ -1,7 +1,6 @@
 """Retransmission logic + the paper's bounds (Lemma 1, Theorem 1)."""
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.retransmit import (declared_lost, elect_retransmitter,
                                    faulty_pair_bound, max_retransmissions,

@@ -3,10 +3,9 @@
 import pytest
 
 from helpers import run_py
-
-from repro.roofline.hlo import collective_bytes_from_hlo, parse_collectives
-from repro.roofline.model import HW, model_flops, roofline_terms
 from repro.configs import SHAPES, get_config
+from repro.roofline.hlo import parse_collectives
+from repro.roofline.model import HW, model_flops, roofline_terms
 
 
 def test_matmul_flop_convention():
@@ -46,7 +45,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.roofline.hlo_cost import analyze_hlo_text
 mesh = Mesh(np.array(jax.devices()[:8]).reshape(2,4), ('data','model'))
 def body(c, _):
-    y = jax.lax.with_sharding_constraint(c @ c, NamedSharding(mesh, P('data', None)))
+    y = jax.lax.with_sharding_constraint(
+        c @ c, NamedSharding(mesh, P('data', None)))
     return y.astype(c.dtype), None
 h = jax.jit(lambda x: jax.lax.scan(body, x, None, length=5)[0],
             in_shardings=NamedSharding(mesh, P('data','model')))

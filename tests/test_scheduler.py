@@ -1,7 +1,6 @@
 """Scheduler tests — includes the paper's Figure 7 worked examples."""
 
 import numpy as np
-import pytest
 
 from repro.core.scheduler import (dss_sequence, hamilton_apportion,
                                   lottery_sequence, round_robin_sequence,

@@ -1,7 +1,6 @@
 """Simulator behaviour tests + JAX-vs-reference cross-checks."""
 
 import numpy as np
-import pytest
 
 from repro.core import (FailureScenario, RSMConfig, SimConfig, run_picsou)
 from repro.core.refsim import run_reference

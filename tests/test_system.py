@@ -1,7 +1,6 @@
 """End-to-end system tests: training convergence, restart determinism,
 ddp-vs-pjit equivalence, serving."""
 
-import numpy as np
 import pytest
 
 from helpers import run_py
