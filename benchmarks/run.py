@@ -4,11 +4,29 @@ Prints each figure's detailed CSV block, then a summary line per table in
 ``name,us_per_call,derived`` form (us_per_call = wall time of the harness
 function; derived = the table's headline number).
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run [--obs] [--only a,b] \
+      [--summary-json BENCH_summary.json]
+
+Sections are failure-isolated: an exception in one sweep is recorded as
+that section's status and the run continues, so the machine-readable
+artifacts are never empty. ``BENCH_summary.json`` (rewritten after
+*every* section, so even a hard crash leaves the completed prefix)
+carries per-section ``status``/``derived``/``error``/``seconds``; any
+section that should have produced a ``BENCH_*.json`` but died before
+its sweep finished gets a stub file with the failure recorded.
+
+``--obs`` additionally runs an instrumented observability pass
+(``repro.obs`` — in-graph metrics fabric + span tracer) and attaches
+its output as a ``metrics`` section to every ``BENCH_*.json`` written
+by the run: delivery-latency histogram + bucketed p50/p95/p99, HWMs,
+event counters, and the host-span rollup with the drain-overlap ratio.
+List-shaped BENCH files are wrapped to ``{"rows": [...], "metrics":
+{...}}`` in that mode; without ``--obs`` their schema is unchanged.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
@@ -135,31 +153,140 @@ def crosspod():
     return f"dcn_reduction={lines[-1].split(',')[-1]}x" if lines else "n/a"
 
 
-def main() -> None:
-    tables = (("fig8_scalability", fig8),
-              ("fig9_failures_stakes", fig9),
-              ("fig10_heterogeneous", fig10),
-              ("thm1_retransmit", thm1),
-              ("windowed_sim", windowed),
-              ("pipeline", pipeline),
-              ("topology_apps", topology),
-              ("replay_whatif", replay),
-              ("kernels", kernels),
-              ("crosspod_collectives", crosspod))
+# section name -> (harness fn, BENCH json the sweep is expected to emit)
+TABLES = (("fig8_scalability", fig8, None),
+          ("fig9_failures_stakes", fig9, None),
+          ("fig10_heterogeneous", fig10, None),
+          ("thm1_retransmit", thm1, None),
+          ("windowed_sim", windowed, "BENCH_windowed.json"),
+          ("pipeline", pipeline, "BENCH_pipeline.json"),
+          ("topology_apps", topology, "BENCH_topology.json"),
+          ("replay_whatif", replay, "BENCH_replay.json"),
+          ("kernels", kernels, None),
+          ("crosspod_collectives", crosspod, None))
+
+
+def obs_metrics_section(n_msgs: int = 4096, k: int = 8) -> dict:
+    """One instrumented observability run (``repro.obs``) as a JSON
+    section: device latency histogram + percentiles and the host span
+    rollup, so every BENCH artifact carries measured distributions next
+    to its headline ratios."""
+    from repro.core.simulator import build_spec
+    from repro.core.types import RSMConfig, SimConfig
+    from repro.obs.report import run_reported
+    sim = SimConfig(n_msgs=n_msgs, steps=n_msgs // 4 + 96, window=4,
+                    phi=6, window_slots="auto", chunk_steps=32,
+                    superchunk=k, collect_metrics=True)
+    spec = build_spec(RSMConfig.bft(1), RSMConfig.bft(1), sim)
+    _, report = run_reported(spec)
+    problems = report.validate()
+    span = report.spans
+    return {
+        "shape": {"n_msgs": n_msgs, "superchunk": k,
+                  "window_slots": report.meta["window_slots"]},
+        "obs": report.obs["link"].to_dict(),
+        "drain_overlap_ratio": span["drain_overlap_ratio"],
+        "span_totals_ms": _span_totals_ms(span),
+        "dispatches": report.meta["chunk_dispatches"],
+        "validated": not problems,
+        "problems": problems,
+    }
+
+
+def _span_totals_ms(span_dict: dict) -> dict:
+    totals: dict = {}
+    for s in span_dict.get("spans", ()):
+        totals[s["name"]] = totals.get(s["name"], 0.0) + s["dur_ns"] / 1e6
+    return {k: round(v, 3) for k, v in sorted(totals.items())}
+
+
+def _attach_metrics(path: str, metrics: dict) -> None:
+    """Add a ``metrics`` section to one BENCH json (wrapping row lists)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        doc = []
+    if isinstance(doc, list):
+        doc = {"rows": doc}
+    doc["metrics"] = metrics
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, default=float)
+    print(f"# attached metrics section to {path}")
+
+
+def _write_stub(path: str, section: str, error: str) -> None:
+    """Failed sweeps still leave a (status-carrying) BENCH artifact."""
+    _dump_json(path, {"rows": [], "section": section,
+                      "status": "failed", "error": error})
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.run")
+    ap.add_argument("--obs", action="store_true",
+                    help="run an instrumented repro.obs pass and attach "
+                         "a metrics section to every BENCH_*.json")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names to run")
+    ap.add_argument("--summary-json", default="BENCH_summary.json")
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    tables = [t for t in TABLES if only is None or t[0] in only]
+    if only:
+        unknown = only - {t[0] for t in TABLES}
+        if unknown:
+            ap.error(f"unknown sections: {sorted(unknown)}; "
+                     f"have {[t[0] for t in TABLES]}")
+
     print("== PICSOU / C3B benchmark suite ==")
     summary = []
-    for name, fn in tables:
+
+    def flush_summary():
+        _dump_json(args.summary_json,
+                   {"status": ("ok" if all(s["status"] == "ok"
+                                           for s in summary) else "partial"),
+                    "sections": summary})
+
+    for name, fn, bench_json in tables:
         print(f"\n### {name}")
         t0 = time.time()
+        entry = {"name": name, "status": "ok", "error": None}
         try:
-            derived = fn()
+            entry["derived"] = fn()
         except Exception as e:  # noqa: BLE001
-            derived = f"FAILED:{type(e).__name__}"
-        summary.append((name, (time.time() - t0) * 1e6, derived))
+            entry.update(status="failed", derived=f"FAILED:{type(e).__name__}",
+                         error=f"{type(e).__name__}: {e}")
+            if bench_json and not os.path.exists(bench_json):
+                _write_stub(bench_json, name, entry["error"])
+        entry["seconds"] = round(time.time() - t0, 3)
+        summary.append(entry)
+        flush_summary()   # crash-safe: completed prefix always on disk
+
+    if args.obs:
+        print("\n### obs (instrumented metrics pass)")
+        t0 = time.time()
+        try:
+            metrics = obs_metrics_section()
+        except Exception as e:  # noqa: BLE001
+            metrics = {"validated": False,
+                       "problems": [f"{type(e).__name__}: {e}"]}
+        for _, _, bench_json in tables:
+            if bench_json and os.path.exists(bench_json):
+                _attach_metrics(bench_json, metrics)
+        summary.append({"name": "obs", "error": None,
+                        "seconds": round(time.time() - t0, 3),
+                        "status": "ok" if metrics.get("validated")
+                        else "failed",
+                        "derived": f"drain_overlap="
+                        f"{metrics.get('drain_overlap_ratio', 0):.3f}"})
+        flush_summary()
+
     print("\n== summary (name,us_per_call,derived) ==")
-    for name, us, derived in summary:
-        print(f"{name},{us:.0f},{derived}")
+    for s in summary:
+        print(f"{s['name']},{s['seconds'] * 1e6:.0f},{s['derived']}")
+    return 0 if all(s["status"] == "ok" for s in summary) else 1
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -203,7 +203,14 @@ def audit_engine(m: int = 64, window_slots: int = 16,
                            are traced inputs of the same jaxpr);
     * ``chunk_final``    — the unrotated final chunk;
     * ``superchunk``     — K fused chunk bodies (``lax.scan`` over
-                           boundaries), the pipelined hot path.
+                           boundaries), the pipelined hot path;
+    * ``chunk_obs`` / ``superchunk_obs`` — the same chunk/superchunk
+                           programs with the in-graph metrics fabric on
+                           (``collect_metrics=True``, carry =
+                           ``(SimState, MetricsCarry)``): the
+                           observability layer must satisfy the exact
+                           same cleanliness contract as the bare engine
+                           (no callbacks, no widenings, donated carry).
     """
     import dataclasses as dc
 
@@ -256,6 +263,28 @@ def audit_engine(m: int = 64, window_slots: int = 16,
     audits.append(audit_callable(
         sc, (bfails, bstate, t0, needs), "superchunk", donate=donate,
         lowered_text=(sc.lower(bfails, bstate, t0, needs).as_text()
+                      if with_lowered else None)))
+
+    # the observability fabric's programs: same constructors with
+    # collect_metrics on, scan carry = (SimState, MetricsCarry)
+    from ..obs.metrics import init_metrics_carry
+    mspec = dc.replace(cspec, collect_metrics=True)
+    bmc = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (1,) + jnp.shape(x)),
+        init_metrics_carry(w))
+    bcarry = (bstate, bmc)
+    fn_obs = jax.vmap(_build_chunk(mspec, w, c, True),
+                      in_axes=(0, 0, None))
+    audits.append(audit_callable(
+        fn_obs, (bfails, bcarry, t0), "chunk_obs", donate=donate,
+        lowered_text=(jax.jit(fn_obs, donate_argnums=donate)
+                      .lower(bfails, bcarry, t0).as_text()
+                      if with_lowered else None)))
+    sc_obs = _compiled_batch_superchunk(mspec, w, c, k)
+    audits.append(audit_callable(
+        sc_obs, (bfails, bcarry, t0, needs), "superchunk_obs",
+        donate=donate,
+        lowered_text=(sc_obs.lower(bfails, bcarry, t0, needs).as_text()
                       if with_lowered else None)))
 
     n_chunks = -(-spec.steps // c)

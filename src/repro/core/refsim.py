@@ -61,6 +61,11 @@ class RefResult:
     resends: np.ndarray       # (T,)
     gc_frontiers: Optional[np.ndarray] = None   # (n_chunks,) window base
     retired_quack_margin: Optional[float] = None
+    # dispatch round of each original send (-1 = never dispatched) and
+    # per-message retire-step - send-step (-1 = not delivered) — the
+    # oracle for ``SimResult.send_step`` / ``SimResult.delivery_latency``
+    send_step: Optional[np.ndarray] = None      # (M,)
+    delivery_latency: Optional[np.ndarray] = None  # (M,)
 
 
 def _cum(received_row: np.ndarray) -> int:
@@ -132,6 +137,7 @@ class _RefMachine:
         self.retry = np.zeros((n_s, m), dtype=np.int64)
         self.quack_time = np.full((n_s, m), -1, dtype=np.int64)
         self.deliver_time = np.full(m, -1, dtype=np.int64)
+        self.send_time = np.full(m, -1, dtype=np.int64)
         self.hq_reports = np.zeros((n_r, n_s), dtype=np.int64)
         self.ack_floor = np.zeros(n_r, dtype=np.int64)
 
@@ -233,6 +239,7 @@ class _RefMachine:
             if (self.orig_sent[k] or self.orig_step[k] > t or k >= floor):
                 continue
             self.orig_sent[k] = True
+            self.send_time[k] = t
             l = self.orig_sender[k]
             if alive_s[l] and not self.byz_send_drop[l]:
                 wire.append((int(l), k, int(self.orig_recv[k])))
@@ -338,7 +345,11 @@ class _RefMachine:
             resends=np.array(self.resend_hist),
             gc_frontiers=frontiers,
             retired_quack_margin=(self.retired_margin if windowed
-                                  else None))
+                                  else None),
+            send_step=self.send_time.copy(),
+            delivery_latency=np.where(
+                self.deliver_time >= 0,
+                self.deliver_time - self.send_time, -1))
 
 
 def run_reference(spec: SimSpec, fail_schedule=None) -> RefResult:

@@ -70,6 +70,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.metrics import (MetricsBlock, ObsMetrics, init_metrics_carry,
+                           migrate_dense_metrics, obs_from_carry,
+                           obs_from_final, pad_metrics,
+                           resume_metrics_carry, rotate_metrics,
+                           snapshot_metrics, update_metrics)
+from ..obs.tracer import obs_begin, obs_end
 from . import scheduler as sched
 from .gc import gc_frontier_device, grow_window, resolve_window_slots
 from .quack import (claim_bitmask, missing_below_horizon,
@@ -126,6 +132,7 @@ class SimSpec:
     superchunk: int = 8               # fused chunks per dispatch (pipeline)
     debug_checks: bool = False        # host-side mirror assertions per drain
     use_pallas_quack: bool = False    # QUACK quorums via the Pallas kernel
+    collect_metrics: bool = False     # in-graph obs fabric (repro.obs)
 
     def scan_state_nbytes(self) -> int:
         """Device bytes of the per-round scan state (the P1 footprint).
@@ -239,6 +246,12 @@ class ChunkCheckpoint(NamedTuple):
     metric_parts: Tuple[StepMetrics, ...]
     bases_hist: np.ndarray       # (n_boundaries_so_far, B)
     growth_events: Tuple[WindowGrowthEvent, ...]
+    # (B, M) dispatch-round mirror (-1 = not yet dispatched) — feeds
+    # ``SimResult.delivery_latency`` and seeds the metrics carry across
+    # a resume. Trailing + defaulted so traces recorded before it
+    # existed still load (``RunTrace._retuple``); ``None`` falls back
+    # to the schedule-derived rounds.
+    send_step: Optional[np.ndarray] = None
 
     def metrics(self) -> StepMetrics:
         """Concatenated (B, t) per-round metrics up to this checkpoint."""
@@ -289,6 +302,16 @@ class SimResult:
     # ``scenario`` field says which lane forced each) took. Empty when
     # the window never grew.
     window_growth_events: Tuple[WindowGrowthEvent, ...] = ()
+    # (M,) round each message's original dispatch actually happened
+    # (commit-floor aware; -1 = never dispatched within the run).
+    send_step: Optional[np.ndarray] = None
+    # (M,) per-message delivery latency: retire step - send step
+    # (-1 = not delivered). Populated by dense, windowed and batched
+    # paths alike; the numpy refsim mirrors it bit-exactly.
+    delivery_latency: Optional[np.ndarray] = None
+    # drained in-graph observability summary (repro.obs), present only
+    # when the run's SimConfig.collect_metrics was set.
+    obs: Optional[ObsMetrics] = None
 
     # --- derived -------------------------------------------------------
     def completion_step(self) -> int:
@@ -390,6 +413,7 @@ def build_spec(sender: RSMConfig, receiver: RSMConfig,
         superchunk=max(sim.superchunk, 1),
         debug_checks=sim.debug_checks,
         use_pallas_quack=sim.use_pallas_quack,
+        collect_metrics=sim.collect_metrics,
     )
 
 
@@ -456,7 +480,8 @@ def _neutral(spec: SimSpec) -> SimSpec:
 
     Host-loop knobs (``superchunk``/``debug_checks``) are normalized away
     — they never change a compiled program. ``use_pallas_quack`` IS part
-    of the program (it selects the quorum kernel), so it survives.
+    of the program (it selects the quorum kernel), so it survives — and
+    so does ``collect_metrics`` (it adds the metrics carry to the scan).
     """
     n_s, n_r = spec.n_s, spec.n_r
     return dataclasses.replace(
@@ -671,14 +696,31 @@ def _sched_arrays(spec: SimSpec):
 
 
 def _build_run(nspec: SimSpec):
-    """Dense full-stream runner: window = [0, M), no rotation."""
+    """Dense full-stream runner: window = [0, M), no rotation.
+
+    With ``collect_metrics`` the scan carry becomes ``(state, carry)``
+    where ``carry`` is the obs fabric's :class:`MetricsCarry`; metrics
+    off, the program is byte-identical to before the fabric existed
+    (the wrapper is a static python branch, asserted in
+    ``tests/test_obs.py``).
+    """
     sched_full = _sched_arrays(nspec)
+    collect = nspec.collect_metrics
 
     def run(fail: FailArrays):
         step = _protocol_step(nspec, fail, sched_full, 0, nspec.m)
         state0 = _init_state(nspec, nspec.m)
         ts = jnp.arange(nspec.steps, dtype=jnp.int32)
-        return jax.lax.scan(step, state0, ts)
+        if not collect:
+            return jax.lax.scan(step, state0, ts)
+
+        def step_obs(carry, t):
+            s, mc = carry
+            s2, ms = step(s, t)
+            return (s2, update_metrics(mc, s, s2, ms, t)), ms
+
+        return jax.lax.scan(step_obs,
+                            (state0, init_metrics_carry(nspec.m)), ts)
 
     return run
 
@@ -774,6 +816,12 @@ def _build_chunk(nspec: SimSpec, w_slots: int, chunk_len: int, rotate: bool):
     outputs as a ``ChunkQueue`` and returns the rotated state; the final
     chunk of a run is instantiated with ``rotate=False`` (frontier
     trajectory matches the host-rotation semantics exactly).
+
+    With ``collect_metrics`` the carried state is ``(SimState,
+    MetricsCarry)`` and a scalar-only :class:`MetricsBlock` snapshot is
+    emitted next to the queue (it rides the same drain — zero extra
+    transfers); metrics off, the signature and jaxpr are byte-identical
+    to the fabric never existing (static python branches only).
     """
     osend, orecv, ostep = (np.asarray(a) for a in
                            (nspec.orig_sender, nspec.orig_recv,
@@ -784,19 +832,31 @@ def _build_chunk(nspec: SimSpec, w_slots: int, chunk_len: int, rotate: bool):
     osend_p, orecv_p = pad(osend, 0), pad(orecv, 0)
     ostep_p = pad(np.minimum(ostep, _NEVER_STEP), _NEVER_STEP)
     stakes_r32 = jnp.asarray(nspec.stakes_r, dtype=jnp.float32)
+    collect = nspec.collect_metrics
 
-    def chunk(fail: FailArrays, state: SimState, t0):
+    def chunk(fail: FailArrays, carry, t0):
         _CHUNK_TRACES[0] += 1       # body runs only while tracing
+        state, mc = carry if collect else (carry, None)
         base0 = state.base
         sl = lambda a: jax.lax.dynamic_slice(a, (base0,), (w_slots,))
         sched_w = (sl(osend_p), sl(orecv_p), sl(ostep_p))
         step = _protocol_step(nspec, fail, sched_w, base0, w_slots)
         ts = t0 + jnp.arange(chunk_len, dtype=jnp.int32)
-        state, ms = jax.lax.scan(step, state, ts)
+        if collect:
+            def step_obs(c, t):
+                s, mcc = c
+                s2, ms = step(s, t)
+                return (s2, update_metrics(mcc, s, s2, ms, t)), ms
+
+            (state, mc), ms = jax.lax.scan(step_obs, (state, mc), ts)
+        else:
+            state, ms = jax.lax.scan(step, state, ts)
         if not rotate:
             queue = ChunkQueue(state.quack_time, state.deliver_time,
                                state.retry, state.recv_has, base0,
                                jnp.zeros((), dtype=jnp.int32))
+            if collect:
+                return (state, mc), ms, queue, snapshot_metrics(mc)
             return state, ms, queue
         f = gc_frontier_device(
             base=base0, t_next=t0 + chunk_len, m=nspec.m,
@@ -807,7 +867,11 @@ def _build_chunk(nspec: SimSpec, w_slots: int, chunk_len: int, rotate: bool):
             byz_ack_low=fail.byz_ack_low)
         queue = ChunkQueue(state.quack_time, state.deliver_time,
                            state.retry, state.recv_has, base0, f)
-        return _rotate_device(state, f, w_slots), ms, queue
+        state = _rotate_device(state, f, w_slots)
+        if collect:
+            mc = rotate_metrics(mc, f, w_slots)
+            return (state, mc), ms, queue, snapshot_metrics(mc)
+        return state, ms, queue
 
     return chunk
 
@@ -854,9 +918,11 @@ def _compiled_batch_superchunk(nspec: SimSpec, w_slots: int,
     """
     chunk = jax.vmap(_build_chunk(nspec, w_slots, chunk_len, rotate=True),
                      in_axes=(0, 0, None))
+    collect = nspec.collect_metrics
 
-    def superchunk(fail: FailArrays, state: SimState, t0, needs):
-        n_b = state.base.shape[0]
+    def superchunk(fail: FailArrays, carry0, t0, needs):
+        sim0 = carry0[0] if collect else carry0
+        n_b = sim0.base.shape[0]
         n_s, n_r = nspec.n_s, nspec.n_r
         zero_q = ChunkQueue(
             quack_time=jnp.zeros((n_b, n_s, w_slots), jnp.int32),
@@ -871,12 +937,25 @@ def _compiled_batch_superchunk(nspec: SimSpec, w_slots: int,
         def body(carry, xs):
             st, alive = carry
             i, need_i = xs
+            sim = st[0] if collect else st
             # the same per-scenario rule the host loop applies at a
             # boundary: window need capped by the commit floor, measured
             # against each lane's own (exact, in-graph) base
             over = (jnp.minimum(need_i, fail.commit_floor - 1)
-                    - st.base)
+                    - sim.base)
             ok = jnp.logical_and(alive, (over < w_slots).all())
+            if collect:
+                # skipped chunks re-emit the carried accumulator
+                # snapshot so the stacked blocks stay structurally
+                # K-deep; the host ignores them via ``oks``
+                st, ms, queue, blk = jax.lax.cond(
+                    ok,
+                    lambda s: chunk(fail, s, t0 + i * chunk_len),
+                    lambda s: (s, zero_ms,
+                               zero_q._replace(base=s[0].base),
+                               snapshot_metrics(s[1])),
+                    st)
+                return (st, ok), (ms, queue, ok, blk)
             st, ms, queue = jax.lax.cond(
                 ok,
                 lambda s: chunk(fail, s, t0 + i * chunk_len),
@@ -885,10 +964,15 @@ def _compiled_batch_superchunk(nspec: SimSpec, w_slots: int,
                 st)
             return (st, ok), (ms, queue, ok)
 
-        (state, _), (ms, queues, oks) = jax.lax.scan(
-            body, (state, jnp.bool_(True)),
+        if collect:
+            (carry0, _), (ms, queues, oks, blks) = jax.lax.scan(
+                body, (carry0, jnp.bool_(True)),
+                (jnp.arange(k, dtype=jnp.int32), needs))
+            return carry0, ms, queues, oks, blks
+        (carry0, _), (ms, queues, oks) = jax.lax.scan(
+            body, (carry0, jnp.bool_(True)),
             (jnp.arange(k, dtype=jnp.int32), needs))
-        return state, ms, queues, oks
+        return carry0, ms, queues, oks
 
     return jax.jit(superchunk, donate_argnums=_donate_state())
 
@@ -988,14 +1072,30 @@ def _run_windowed(spec: SimSpec) -> SimResult:
     return _run_windowed_batch([spec])[0]
 
 
+def _dense_send_step(spec: SimSpec) -> np.ndarray:
+    """Dispatch rounds of the dense (ungated) path: the schedule round,
+    -1 for messages whose round never arrives within ``steps``."""
+    ostep = np.asarray(spec.orig_step, dtype=np.int64)
+    return np.where(ostep < spec.steps, ostep, -1).astype(np.int32)
+
+
+def _latency_from(send_step: np.ndarray,
+                  deliver_time: np.ndarray) -> np.ndarray:
+    """Per-message retire-step - send-step; -1 = not delivered."""
+    return np.where(deliver_time >= 0, deliver_time - send_step,
+                    -1).astype(np.int32)
+
+
 def run_simulation(spec: SimSpec) -> SimResult:
     """Run one spec: windowed when ``spec.window_slots > 0``, else dense."""
     if spec.window_slots:
         return _run_windowed(spec)
-    final, ms = _compiled_sim(_neutral(spec))(_fail_arrays(spec))
+    carry, ms = _compiled_sim(_neutral(spec))(_fail_arrays(spec))
     # one explicit batched fetch — per-leaf np.asarray here is an
     # implicit d2h transfer the analysis sanitizer rejects
-    final, ms = jax.device_get((final, ms))
+    carry, ms = jax.device_get((carry, ms))
+    final, mc = carry if spec.collect_metrics else (carry, None)
+    ss = _dense_send_step(spec)
     return SimResult(
         spec=spec,
         metrics=StepMetrics(*ms),
@@ -1005,6 +1105,9 @@ def run_simulation(spec: SimSpec) -> SimResult:
         recv_has=final.recv_has,
         gc_frontiers=np.zeros(1, dtype=np.int64),
         final_window_slots=spec.m,
+        send_step=ss,
+        delivery_latency=_latency_from(ss, final.deliver_time),
+        obs=obs_from_carry(mc) if mc is not None else None,
     )
 
 
@@ -1016,10 +1119,13 @@ def _stacked_fails(specs: Sequence[SimSpec]) -> FailArrays:
 
 def _run_dense_batch(specs: List[SimSpec]) -> List[SimResult]:
     nspec = _neutral(specs[0])
-    finals, ms = _compiled_batch(nspec)(_stacked_fails(specs))
-    finals, ms = jax.device_get((finals, ms))
+    carry, ms = _compiled_batch(nspec)(_stacked_fails(specs))
+    carry, ms = jax.device_get((carry, ms))
+    collect = specs[0].collect_metrics
+    finals, mc = carry if collect else (carry, None)
     out = []
     for b, spec in enumerate(specs):
+        ss = _dense_send_step(spec)
         out.append(SimResult(
             spec=spec,
             metrics=StepMetrics(*(x[b] for x in ms)),
@@ -1029,6 +1135,9 @@ def _run_dense_batch(specs: List[SimSpec]) -> List[SimResult]:
             recv_has=finals.recv_has[b],
             gc_frontiers=np.zeros(1, dtype=np.int64),
             final_window_slots=spec.m,
+            send_step=ss,
+            delivery_latency=_latency_from(ss, finals.deliver_time[b]),
+            obs=obs_from_final(mc, [], b) if collect else None,
         ))
     return out
 
@@ -1083,15 +1192,20 @@ def _run_windowed_batch(specs: List[SimSpec], commit_floors=None, *,
     ``jax.device_get``) raises ``SanitizerError`` instead of silently
     serializing the pipeline.
     """
-    if specs and specs[0].debug_checks:
-        from ..analysis.sanitizer import engine_guard
-        with engine_guard():
-            return _run_windowed_batch_impl(
-                specs, commit_floors, fail_schedule=fail_schedule,
-                recorder=recorder, resume=resume)
-    return _run_windowed_batch_impl(
-        specs, commit_floors, fail_schedule=fail_schedule,
-        recorder=recorder, resume=resume)
+    _tr = obs_begin()
+    try:
+        if specs and specs[0].debug_checks:
+            from ..analysis.sanitizer import engine_guard
+            with engine_guard():
+                return _run_windowed_batch_impl(
+                    specs, commit_floors, fail_schedule=fail_schedule,
+                    recorder=recorder, resume=resume)
+        return _run_windowed_batch_impl(
+            specs, commit_floors, fail_schedule=fail_schedule,
+            recorder=recorder, resume=resume)
+    finally:
+        obs_end(_tr, "run", cat="engine", lanes=len(specs),
+                steps=specs[0].steps if specs else 0)
 
 
 def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
@@ -1157,6 +1271,12 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
     c_full = max(spec0.chunk_steps, 1)
 
     dispatched_by = _max_msg_by_round(spec0)
+    collect = spec0.collect_metrics
+    ostep = np.asarray(spec0.orig_step, dtype=np.int64)
+
+    # carry = SimState when metrics are off, (SimState, MetricsCarry)
+    # when on — the two accessors keep the loop body branch-free
+    _sim = (lambda cy: cy[0]) if collect else (lambda cy: cy)
 
     if resume is None:
         w = spec0.window_slots
@@ -1165,15 +1285,23 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
         out_deliver = np.full((n_b, m), -1, dtype=np.int32)
         out_retry = np.zeros((n_b, n_s, m), dtype=np.int32)
         out_recv = np.zeros((n_b, n_r, m), dtype=bool)
-        state = jax.tree_util.tree_map(
+        carry = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (n_b,) + x.shape),
             _init_state(nspec, w))
+        if collect:
+            carry = (carry, jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (n_b,) + x.shape),
+                init_metrics_carry(w)))
         bases = np.zeros(n_b, dtype=np.int64)
         bases_hist = [bases.copy()]
         floors = np.full(n_b, m, dtype=np.int64)
         t = 0
         metric_parts = []
         growth_events: List[WindowGrowthEvent] = []
+        # per-message dispatch-round mirror (commit-floor aware): filled
+        # as floors open, feeds SimResult.delivery_latency + checkpoints
+        send_step = np.full((n_b, m), -1, dtype=np.int64)
+        open_floor = np.zeros(n_b, dtype=np.int64)
     else:
         if len(resume.bases) != n_b:
             raise ValueError(
@@ -1185,7 +1313,7 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
         out_deliver = np.array(resume.out_deliver, dtype=np.int32)
         out_retry = np.array(resume.out_retry, dtype=np.int32)
         out_recv = np.array(resume.out_recv, dtype=bool)
-        state = device_state(resume.state)
+        carry = device_state(resume.state)
         bases = np.array(resume.bases, dtype=np.int64)
         bases_hist = [np.array(r, dtype=np.int64)
                       for r in resume.bases_hist]
@@ -1194,11 +1322,25 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
         metric_parts = [p for p in resume.metric_parts
                         if np.asarray(p.acks).shape[-1]]
         growth_events = list(resume.growth_events)
+        if resume.send_step is not None:
+            send_step = np.array(resume.send_step, dtype=np.int64)
+        else:
+            # pre-send_step trace: every message below the checkpoint's
+            # floor dispatched at its schedule round (exact for
+            # standalone links, where the floor opened at t=0)
+            send_step = np.where(
+                np.arange(m, dtype=np.int64)[None, :] < floors[:, None],
+                ostep[None, :], -1)
+        open_floor = floors.copy()
+        if collect:
+            carry = (carry,
+                     resume_metrics_carry(w, bases, send_step, m))
 
     K = max(spec0.superchunk, 1)
     debug = spec0.debug_checks
 
     pending: List[dict] = []   # dispatched, not yet drained (≤ 1 entry)
+    obs_parts: List = []       # drained per-chunk MetricsBlock snapshots
 
     def drain_one(ent: dict) -> None:
         """Materialize one dispatch's K-deep queue + metric blocks and
@@ -1208,8 +1350,15 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
         of the first unexecuted chunk; the loop re-enters there and
         takes the growth decision exactly where K = 1 would have."""
         nonlocal bases, t
-        ms, queue, oks = jax.device_get(
-            (ent["ms"], ent["queue"], ent["oks"]))
+        _tw = obs_begin()
+        # one batched fetch per dispatch — the metrics blocks (when
+        # collecting) ride the same device_get, zero extra transfers
+        ms, queue, oks, blk = jax.device_get(
+            (ent["ms"], ent["queue"], ent["oks"], ent["blk"]))
+        # a successor dispatch still in flight means this wait ran
+        # concurrently with device compute (PR 5 double buffering)
+        obs_end(_tw, "drain_wait", cat="drain", k=ent["k"],
+                overlapped=bool(pending))
         _HOST_SYNCS[0] += 1
         k = ent["k"]
         executed = k if oks is None else int(np.asarray(oks).sum())
@@ -1217,13 +1366,18 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
             t = ent["t0"] + executed * ent["c"]
         for i in range(executed):
             if k == 1:
-                msp, qp = ms, queue
+                msp, qp, bp = ms, queue, blk
             else:
                 msp = StepMetrics(*(getattr(ms, name)[i]
                                     for name in StepMetrics._fields))
                 qp = ChunkQueue(*(getattr(queue, name)[i]
                                   for name in ChunkQueue._fields))
+                bp = None if blk is None else MetricsBlock(
+                    *(getattr(blk, name)[i]
+                      for name in MetricsBlock._fields))
             metric_parts.append(StepMetrics(*(np.asarray(x) for x in msp)))
+            if bp is not None:
+                obs_parts.append(bp)
             if not ent["rotate"]:
                 continue               # final chunk: nothing retired
             # the host's base mirror must track the in-graph rotation
@@ -1264,25 +1418,39 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
         if recorder is not None and recorder.wants(t):
             drain_all()
             _HOST_SYNCS[0] += 1
+            _tc = obs_begin()
             recorder.capture(ChunkCheckpoint(
                 t=t, window_slots=w, bases=bases.copy(),
-                state=_np_state(state), fails=_np_state(fails),
+                state=_np_state(_sim(carry)), fails=_np_state(fails),
                 floors=floors.copy(),
                 out_quack=out_quack.copy(), out_deliver=out_deliver.copy(),
                 out_retry=out_retry.copy(), out_recv=out_recv.copy(),
                 metric_parts=tuple(metric_parts),
                 bases_hist=np.stack(bases_hist),
-                growth_events=tuple(growth_events)))
+                growth_events=tuple(growth_events),
+                send_step=send_step.copy()))
+            obs_end(_tc, "checkpoint", cat="snapshot", t=t)
         # (c) commit floors are a function of this boundary's actual
         # retired prefixes, so the pipeline drains before asking
         if commit_floors is not None:
             drain_all()
+            _tp = obs_begin()
             new_floors = np.asarray(commit_floors(t, bases.copy()),
                                     dtype=np.int64)
+            obs_end(_tp, "plan_floors", cat="plan", t=t)
             if not np.array_equal(new_floors, floors):
                 floors = new_floors
                 fails = fails._replace(
                     commit_floor=jnp.asarray(floors, dtype=jnp.int32))
+        # (c2) dispatch-round mirror: floors that opened since the last
+        # boundary dispatch their newly-committed messages at
+        # max(schedule round, now) — standalone links (floor = M at
+        # t = 0) reduce to the schedule rounds exactly
+        if (floors > open_floor).any():
+            for b in np.nonzero(floors > open_floor)[0]:
+                ks = np.arange(open_floor[b], floors[b])
+                send_step[b, ks] = np.maximum(ostep[ks], t)
+                open_floor[b] = floors[b]
         # (d) per-scenario overflow check: a scenario dispatches nothing
         # past its commit floor, so its window need is capped by
         # floor - 1 and measured against its OWN base (a chained link's
@@ -1305,15 +1473,30 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
                 new_w=m if new_w is None else new_w,
                 dense_migration=new_w is None))
             if new_w is None:
-                state = _migrate_dense_batch(spec0, state, bases, out_quack,
-                                             out_deliver, out_retry,
-                                             out_recv)
+                _tg = obs_begin()
+                sim_state = _migrate_dense_batch(
+                    spec0, _sim(carry), bases, out_quack,
+                    out_deliver, out_retry, out_recv)
+                if collect:
+                    carry = (sim_state, migrate_dense_metrics(
+                        carry[1], bases, send_step, m))
+                else:
+                    carry = sim_state
                 _HOST_SYNCS[0] += 1
                 bases[:] = 0
                 w = m
+                obs_end(_tg, "dense_migration", cat="window", t=t,
+                        new_w=m)
             else:
-                state = _grow_state(state, new_w)
+                _tg = obs_begin()
+                if collect:
+                    carry = (_grow_state(carry[0], new_w),
+                             pad_metrics(carry[1], new_w))
+                else:
+                    carry = _grow_state(carry, new_w)
                 w = new_w
+                obs_end(_tg, "window_growth", cat="window", t=t,
+                        new_w=new_w)
         # (e) fusion span: up to K full rotating chunks per dispatch,
         # broken at every boundary where host interaction is mandatory —
         # a recorder checkpoint, a failure-schedule swap, a commit-floor
@@ -1345,20 +1528,34 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
         # (f) dispatch, then drain the *previous* dispatch's queue while
         # this one computes (async double buffering; JAX dispatch is
         # asynchronous, so the call returns before the device finishes)
+        _td = obs_begin()
+        traces_before = _CHUNK_TRACES[0]
+        blk = None
         if k == 1:
-            state, ms, queue = _compiled_batch_chunk(cspec, w, c,
-                                                     not last)(
-                fails, state, jnp.int32(t))
+            res = _compiled_batch_chunk(cspec, w, c, not last)(
+                fails, carry, jnp.int32(t))
+            if collect:
+                carry, ms, queue, blk = res
+            else:
+                carry, ms, queue = res
             oks = None
         else:
             needs = np.asarray(dispatched_by[t + c - 1:t + k * c:c],
                                dtype=np.int32)
-            state, ms, queue, oks = _compiled_batch_superchunk(
-                cspec, w, c, k)(fails, state, jnp.int32(t),
+            res = _compiled_batch_superchunk(
+                cspec, w, c, k)(fails, carry, jnp.int32(t),
                                 jnp.asarray(needs))
+            if collect:
+                carry, ms, queue, oks, blk = res
+            else:
+                carry, ms, queue, oks = res
         _CHUNK_DISPATCHES[0] += 1
+        obs_end(_td,
+                "compile" if _CHUNK_TRACES[0] > traces_before
+                else "dispatch",
+                cat="dispatch", t=t, k=k)
         pending.append(dict(t0=t, k=k, c=c, rotate=not last, ms=ms,
-                            queue=queue, oks=oks))
+                            queue=queue, oks=oks, blk=blk))
         t += k * c
         while len(pending) > 1:
             drain_one(pending.pop(0))
@@ -1366,13 +1563,21 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
             drain_all()   # sync regime (and the superchunk=1 legacy loop)
 
     drain_all()
-    final = _np_state(state)
+    _tf = obs_begin()
+    got = jax.device_get(carry)        # one batched fetch, carry incl.
+    final = _sim(got)                  # the metrics carry when enabled
+    final_mc = got[1] if collect else None
     _HOST_SYNCS[0] += 1
     _scatter_retired(
         bases, np.minimum(w, m - bases).clip(min=0),
         (final.quack_time, final.deliver_time, final.retry,
          final.recv_has),
         (out_quack, out_deliver, out_retry, out_recv))
+    obs_end(_tf, "final_flush", cat="drain")
+
+    # sanitize the dispatch mirror: a round beyond the run never fired
+    ss_all = np.where((send_step >= 0) & (send_step < spec0.steps),
+                      send_step, -1).astype(np.int32)
 
     traj = np.stack(bases_hist)                     # (n_boundaries, n_b)
     all_metrics = _concat_metrics(n_b, metric_parts)
@@ -1388,6 +1593,10 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
             gc_frontiers=traj[:, b].astype(np.int64),
             final_window_slots=w,
             window_growth_events=events,
+            send_step=ss_all[b],
+            delivery_latency=_latency_from(ss_all[b], out_deliver[b]),
+            obs=(obs_from_final(final_mc, obs_parts, b)
+                 if collect else None),
         ))
     return out
 

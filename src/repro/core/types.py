@@ -252,6 +252,16 @@ class SimConfig:
                      Pallas TPU kernel ``kernels.quack_scan`` instead of
                      the jnp einsum path. Interpret mode on CPU (bit-
                      faithful, slow); default off.
+    collect_metrics: carry the in-graph observability fabric
+                     (``repro.obs.metrics.MetricsCarry``) through the
+                     chunk/superchunk scan bodies: per-lane delivery-
+                     latency histograms (power-of-two buckets), window-
+                     occupancy and GC-frontier-lag high-water marks,
+                     QUACK/loss-quorum trigger counts and resend totals,
+                     drained with the existing per-dispatch queue (zero
+                     extra dispatches or transfers). Off by default —
+                     disabled runs stage byte-identical jaxprs
+                     (``tests/test_obs.py``).
     """
 
     n_msgs: int = 256
@@ -267,6 +277,7 @@ class SimConfig:
     superchunk: int = 8
     debug_checks: bool = False
     use_pallas_quack: bool = False
+    collect_metrics: bool = False
 
     def __post_init__(self):
         ws = self.window_slots

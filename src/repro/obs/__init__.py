@@ -1,0 +1,47 @@
+"""repro.obs — observability layer.
+
+Three parts (ISSUE 8):
+
+  * :mod:`repro.obs.metrics` — in-graph metrics fabric carried through
+    the chunk/superchunk scan bodies (delivery-latency histograms,
+    occupancy/GC-lag high-water marks, quorum trigger counts).
+  * :mod:`repro.obs.tracer` — host-side monotonic-clock span tracer
+    with Chrome-trace/Perfetto export and drain-overlap ratio.
+  * :mod:`repro.obs.report` — merges device metrics + host spans into
+    one ``RunReport`` (npz+json); CLI via ``python -m repro.obs``.
+
+``report`` imports the engine, and the engine imports ``metrics`` —
+so this package init deliberately pulls in only the cycle-free halves;
+import ``repro.obs.report`` directly (it is not re-exported here).
+"""
+
+from .metrics import (  # noqa: F401
+    LATENCY_BUCKET_EDGES,
+    NUM_LATENCY_BUCKETS,
+    MetricsBlock,
+    MetricsCarry,
+    ObsMetrics,
+    bucket_label,
+    init_metrics_carry,
+    latency_bucket,
+    latency_bucket_np,
+    latency_histogram_np,
+    migrate_dense_metrics,
+    obs_from_carry,
+    obs_from_final,
+    pad_metrics,
+    percentile_from_hist,
+    resume_metrics_carry,
+    rotate_metrics,
+    snapshot_metrics,
+    update_metrics,
+)
+from .tracer import (  # noqa: F401
+    Span,
+    SpanTracer,
+    current_tracer,
+    obs_begin,
+    obs_end,
+    obs_span,
+    tracing,
+)

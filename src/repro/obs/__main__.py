@@ -1,0 +1,150 @@
+"""CLI driver for the observability stack.
+
+``python -m repro.obs --selftest`` is the CI fast-tier gate: it runs a
+512-message K=8 pipelined windowed stream with the in-graph metrics
+fabric on and the span tracer installed, then checks
+
+  * the exported Chrome trace against the trace-event schema
+    (:func:`repro.obs.report.validate_chrome_trace`),
+  * every device histogram against the numpy latency oracle and the
+    drained delivery counts (:meth:`RunReport.validate`),
+  * that the canonical engine span names actually showed up,
+  * that metrics collection added zero device dispatches versus the
+    metrics-off run of the same spec (the zero-transfer contract),
+
+and writes the RunReport artifact (``report.json`` / ``report.npz`` /
+``trace.json``) into ``--out`` for CI upload. Exit code 0 = all checks
+passed.
+
+Without ``--selftest`` it runs the same pipeline at user-chosen shape
+and prints the percentile table + span summary — a quick way to eyeball
+a run's timeline before loading ``trace.json`` into Perfetto.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+import numpy as np
+
+from ..core.simulator import build_spec, chunk_dispatch_count, run_simulation
+from ..core.types import RSMConfig, SimConfig
+from .report import run_reported
+
+# spans the engine must emit for any chunked windowed run
+_REQUIRED_SPANS = ("run", "drain_wait", "final_flush")
+
+
+def _build(args) -> SimConfig:
+    steps = args.msgs // args.window + 96
+    return SimConfig(
+        n_msgs=args.msgs, steps=steps, window=args.window, phi=6,
+        window_slots=args.window_slots, chunk_steps=args.chunk_steps,
+        superchunk=args.k, collect_metrics=True)
+
+
+def _run(args):
+    sim = _build(args)
+    spec = build_spec(RSMConfig.bft(1), RSMConfig.bft(1), sim)
+    result, report = run_reported(spec)
+    return spec, result, report
+
+
+def _write_artifacts(report, out: str) -> None:
+    os.makedirs(out, exist_ok=True)
+    paths = report.save(os.path.join(out, "report"))
+    tpath = os.path.join(out, "trace.json")
+    import json
+    with open(tpath, "w") as f:
+        json.dump(report.chrome_trace, f)
+    print(f"# wrote {paths['json']} {paths['npz']} {tpath}")
+
+
+def selftest(args) -> int:
+    """512-msg K=8 observability self-test; returns exit code."""
+    spec, result, report = _run(args)
+    problems = report.validate()
+
+    names = {e["name"] for e in report.chrome_trace["traceEvents"]}
+    for want in _REQUIRED_SPANS:
+        if want not in names:
+            problems.append(f"span {want!r} missing from trace "
+                            f"(got {sorted(names)})")
+    if "compile" not in names and "dispatch" not in names:
+        problems.append("neither compile nor dispatch spans recorded")
+
+    lat = np.asarray(result.delivery_latency)
+    delivered = int((lat >= 0).sum())
+    if delivered != spec.m:
+        problems.append(f"only {delivered}/{spec.m} messages delivered "
+                        f"in the failure-free selftest stream")
+    o = report.obs["link"]
+    if o.total_counted() != delivered:
+        problems.append(f"histogram total {o.total_counted()} != "
+                        f"drained count {delivered}")
+
+    # metrics-off twin: collection must add zero device dispatches
+    off = dataclasses.replace(spec, collect_metrics=False)
+    d0 = chunk_dispatch_count()
+    off_res = run_simulation(off)
+    off_dispatches = chunk_dispatch_count() - d0
+    if report.meta["chunk_dispatches"] != off_dispatches:
+        problems.append(
+            f"metrics-on used {report.meta['chunk_dispatches']} "
+            f"dispatches, metrics-off used {off_dispatches}")
+    if not np.array_equal(np.asarray(off_res.deliver_time),
+                          np.asarray(result.deliver_time)):
+        problems.append("metrics collection changed deliver_time")
+
+    print(report.summary())
+    _write_artifacts(report, args.out)
+    if problems:
+        print("\nSELFTEST FAILED:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"\nSELFTEST OK: {delivered} deliveries, "
+          f"{len(report.chrome_trace['traceEvents'])} spans, "
+          f"{report.meta['chunk_dispatches']} dispatches "
+          f"(metrics-off: {off_dispatches})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the CI observability gate (512 msgs, K=8)")
+    ap.add_argument("--msgs", type=int, default=512)
+    ap.add_argument("--k", type=int, default=8,
+                    help="superchunk fusion depth")
+    ap.add_argument("--window", type=int, default=4,
+                    help="sender dispatch window per round")
+    ap.add_argument("--window-slots", default=128,
+                    help="W (int) or 'auto' (default 128: small streams "
+                         "must still exercise the windowed kernel)")
+    ap.add_argument("--chunk-steps", type=int, default=16)
+    ap.add_argument("--out", default="obs_out",
+                    help="artifact directory (report + chrome trace)")
+    args = ap.parse_args(argv)
+    if isinstance(args.window_slots, str) and args.window_slots != "auto":
+        args.window_slots = int(args.window_slots)
+
+    if args.selftest:
+        return selftest(args)
+    spec, result, report = _run(args)
+    print(report.summary())
+    print()
+    print(report.histogram_table("link"))
+    _write_artifacts(report, args.out)
+    problems = report.validate()
+    for p in problems:
+        print(f"WARNING: {p}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,363 @@
+"""In-graph observability fabric for the windowed engine.
+
+The metrics fabric is a small pytree (:class:`MetricsCarry`) threaded
+through the chunk/superchunk scan bodies alongside ``SimState``.  Every
+protocol round it accumulates, per lane:
+
+  * a delivery-latency histogram — bucketed ``retire_step - send_step``
+    deltas over fixed power-of-two buckets, so the update is a static
+    ``.at[].add`` scatter and fully trace-safe,
+  * window-occupancy and GC-frontier-lag high-water marks,
+  * QUACK / loss-quorum trigger counts and cumulative resend totals.
+
+Only scalar accumulators leave the device: :func:`snapshot_metrics`
+emits a :class:`MetricsBlock` (no window-shaped leaves) that rides the
+existing one-``device_get``-per-dispatch drain next to ``ChunkQueue`` —
+zero additional dispatches or transfers.  The per-slot ``send_time``
+ring stays on device and is rotated/padded in lockstep with the window
+(:func:`rotate_metrics` / :func:`pad_metrics`).
+
+Everything here is derived from *state deltas* — ``_protocol_step``
+itself is untouched, and when ``SimConfig.collect_metrics`` is off the
+engine builds byte-identical jaxprs (asserted by ``tests/test_obs.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "NUM_LATENCY_BUCKETS",
+    "LATENCY_BUCKET_EDGES",
+    "MetricsCarry",
+    "MetricsBlock",
+    "ObsMetrics",
+    "init_metrics_carry",
+    "update_metrics",
+    "rotate_metrics",
+    "pad_metrics",
+    "snapshot_metrics",
+    "latency_bucket",
+    "latency_bucket_np",
+    "latency_histogram_np",
+    "bucket_label",
+    "percentile_from_hist",
+    "migrate_dense_metrics",
+    "resume_metrics_carry",
+    "obs_from_carry",
+    "obs_from_final",
+]
+
+# Power-of-two bucket edges (python ints — no import-time jnp).  A
+# latency ``x`` lands in bucket ``#edges <= x``: bucket 0 holds x < 1
+# (same-round retirement), bucket i holds 2^(i-1) <= x < 2^i, and the
+# last bucket is the >= 2^16 overflow sink.
+NUM_LATENCY_BUCKETS = 18
+LATENCY_BUCKET_EDGES = tuple(2 ** i for i in range(NUM_LATENCY_BUCKETS - 1))
+
+
+class MetricsCarry(NamedTuple):
+    """Device-resident metrics state carried through the chunk scan.
+
+    ``send_time`` is window-shaped (one slot per live message, -1 when
+    the slot's message has not been dispatched); everything else is a
+    scalar accumulator.
+    """
+
+    send_time: jnp.ndarray      # (W,) int32, dispatch round or -1
+    latency_hist: jnp.ndarray   # (NUM_LATENCY_BUCKETS,) int32
+    occupancy_hwm: jnp.ndarray  # () int32, max in-flight msgs
+    gc_lag_hwm: jnp.ndarray     # () int32, max dispatched-in-window
+    quack_events: jnp.ndarray   # () int32, QUACK quorum first-trips
+    loss_events: jnp.ndarray    # () int32, loss-quorum (retry) triggers
+    resend_total: jnp.ndarray   # () int32, cumulative resent messages
+    uncounted: jnp.ndarray      # () int32, deliveries with unknown send
+
+
+class MetricsBlock(NamedTuple):
+    """Scalar-only snapshot of ``MetricsCarry`` drained per chunk."""
+
+    latency_hist: jnp.ndarray   # (NUM_LATENCY_BUCKETS,) int32
+    occupancy_hwm: jnp.ndarray  # () int32
+    gc_lag_hwm: jnp.ndarray     # () int32
+    quack_events: jnp.ndarray   # () int32
+    loss_events: jnp.ndarray    # () int32
+    resend_total: jnp.ndarray   # () int32
+    uncounted: jnp.ndarray      # () int32
+
+
+def init_metrics_carry(w_slots: int) -> MetricsCarry:
+    z = jnp.zeros((), dtype=jnp.int32)
+    return MetricsCarry(
+        send_time=jnp.full((w_slots,), -1, dtype=jnp.int32),
+        latency_hist=jnp.zeros((NUM_LATENCY_BUCKETS,), dtype=jnp.int32),
+        occupancy_hwm=z,
+        gc_lag_hwm=z,
+        quack_events=z,
+        loss_events=z,
+        resend_total=z,
+        uncounted=z,
+    )
+
+
+def latency_bucket(lat: jnp.ndarray) -> jnp.ndarray:
+    """Bucket index for each latency (trace-safe, static edges)."""
+    edges = jnp.asarray(LATENCY_BUCKET_EDGES, dtype=jnp.int32)
+    return (lat[..., None] >= edges).sum(axis=-1).astype(jnp.int32)
+
+
+def update_metrics(mc, old_state, new_state, ms, t):
+    """Fold one protocol round's state delta into the carry.
+
+    ``old_state``/``new_state`` are the window-shaped ``SimState``
+    before/after ``_protocol_step`` at round ``t``; ``ms`` is the
+    round's ``StepMetrics``.  Pure function of its inputs — safe under
+    vmap/scan/jit.
+    """
+    sent_now = jnp.logical_and(new_state.orig_sent,
+                               jnp.logical_not(old_state.orig_sent))
+    send_time = jnp.where(sent_now, t, mc.send_time).astype(jnp.int32)
+
+    delivered_now = jnp.logical_and(old_state.deliver_time < 0,
+                                    new_state.deliver_time >= 0)
+    known = send_time >= 0
+    counted = jnp.logical_and(delivered_now, known)
+    lat = jnp.maximum(t - send_time, 0)
+    hist = mc.latency_hist.at[latency_bucket(lat)].add(
+        counted.astype(jnp.int32))
+
+    in_flight = jnp.logical_and(
+        new_state.orig_sent, new_state.deliver_time < 0
+    ).sum().astype(jnp.int32)
+    # Frontier lag: dispatched slots still resident in the window —
+    # i.e. how far the GC frontier trails the dispatch head.
+    gc_lag = new_state.orig_sent.sum().astype(jnp.int32)
+
+    return MetricsCarry(
+        send_time=send_time,
+        latency_hist=hist,
+        occupancy_hwm=jnp.maximum(mc.occupancy_hwm, in_flight),
+        gc_lag_hwm=jnp.maximum(mc.gc_lag_hwm, gc_lag),
+        quack_events=(mc.quack_events + jnp.logical_and(
+            old_state.quack_time < 0, new_state.quack_time >= 0
+        ).sum()).astype(jnp.int32),
+        loss_events=(mc.loss_events
+                     + (new_state.retry - old_state.retry).sum()
+                     ).astype(jnp.int32),
+        resend_total=(mc.resend_total + ms.resends).astype(jnp.int32),
+        uncounted=(mc.uncounted + jnp.logical_and(
+            delivered_now, jnp.logical_not(known)
+        ).sum()).astype(jnp.int32),
+    )
+
+
+def rotate_metrics(mc: MetricsCarry, frontier, w_slots: int
+                   ) -> MetricsCarry:
+    """Shift ``send_time`` with the window ring (traced ``frontier``)."""
+    ext = jnp.concatenate(
+        [mc.send_time, jnp.full((w_slots,), -1, dtype=jnp.int32)])
+    return mc._replace(
+        send_time=jax.lax.dynamic_slice_in_dim(ext, frontier, w_slots))
+
+
+def pad_metrics(mc: MetricsCarry, new_w: int) -> MetricsCarry:
+    """Grow ``send_time`` to ``new_w`` slots (batched leaves OK)."""
+    pad = new_w - mc.send_time.shape[-1]
+    fill = jnp.full(mc.send_time.shape[:-1] + (pad,), -1,
+                    dtype=jnp.int32)
+    return mc._replace(
+        send_time=jnp.concatenate([mc.send_time, fill], axis=-1))
+
+
+def snapshot_metrics(mc: MetricsCarry) -> MetricsBlock:
+    """Scalar accumulators only — what rides the drain."""
+    return MetricsBlock(*(getattr(mc, f) for f in MetricsBlock._fields))
+
+
+# ---------------------------------------------------------------------------
+# Host-side mirrors & summaries (never called from trace contexts)
+# ---------------------------------------------------------------------------
+
+
+def latency_bucket_np(lat) -> np.ndarray:
+    edges = np.asarray(LATENCY_BUCKET_EDGES, dtype=np.int64)
+    return (np.asarray(lat)[..., None] >= edges).sum(axis=-1)
+
+
+def latency_histogram_np(latencies) -> np.ndarray:
+    """Oracle histogram from a raw latency array (-1 = undelivered)."""
+    lat = np.asarray(latencies).ravel()
+    lat = lat[lat >= 0]
+    hist = np.zeros(NUM_LATENCY_BUCKETS, dtype=np.int64)
+    np.add.at(hist, latency_bucket_np(lat), 1)
+    return hist
+
+
+def bucket_label(i: int) -> str:
+    if i == 0:
+        return "0"
+    if i == NUM_LATENCY_BUCKETS - 1:
+        return ">=%d" % LATENCY_BUCKET_EDGES[-1]
+    lo, hi = LATENCY_BUCKET_EDGES[i - 1], LATENCY_BUCKET_EDGES[i]
+    if hi - lo == 1:
+        return "%d" % lo
+    return "%d-%d" % (lo, hi - 1)
+
+
+def percentile_from_hist(hist, q: float) -> int:
+    """Upper bucket edge covering the q-th percentile (q in [0,100]).
+
+    Conservative (bucketed) estimate: returns the smallest power-of-two
+    edge E such that at least q% of counted deliveries had latency < E
+    (0 for bucket 0).  -1 when the histogram is empty.
+    """
+    hist = np.asarray(hist, dtype=np.int64)
+    total = int(hist.sum())
+    if total == 0:
+        return -1
+    need = q / 100.0 * total
+    cum = np.cumsum(hist)
+    idx = int(np.searchsorted(cum, need))       # bucket holding the q-th
+    if idx == 0:
+        return 0                                # bucket 0: latency < 1
+    # bucket i (i >= 1) holds [2^(i-1), 2^i): upper edge = edges[i];
+    # the overflow sink has no finite upper edge — report its lower one
+    return int(LATENCY_BUCKET_EDGES[min(idx,
+                                        len(LATENCY_BUCKET_EDGES) - 1)])
+
+
+@dataclasses.dataclass
+class ObsMetrics:
+    """Per-lane device-metrics summary drained from one run."""
+
+    latency_hist: np.ndarray            # (NUM_LATENCY_BUCKETS,) int64
+    occupancy_hwm: int
+    gc_lag_hwm: int
+    quack_events: int
+    loss_events: int
+    resend_total: int
+    uncounted: int
+    per_chunk_hist: Optional[np.ndarray] = None  # (n_chunks, NB) int64
+
+    def total_counted(self) -> int:
+        return int(np.asarray(self.latency_hist).sum())
+
+    def percentiles(self, qs=(50, 95, 99)) -> dict:
+        return {"p%g" % q: percentile_from_hist(self.latency_hist, q)
+                for q in qs}
+
+    def to_dict(self) -> dict:
+        d = {
+            "latency_hist": np.asarray(self.latency_hist).tolist(),
+            "bucket_labels": [bucket_label(i)
+                              for i in range(NUM_LATENCY_BUCKETS)],
+            "occupancy_hwm": int(self.occupancy_hwm),
+            "gc_lag_hwm": int(self.gc_lag_hwm),
+            "quack_events": int(self.quack_events),
+            "loss_events": int(self.loss_events),
+            "resend_total": int(self.resend_total),
+            "uncounted": int(self.uncounted),
+            "total_counted": self.total_counted(),
+        }
+        d.update(self.percentiles())
+        return d
+
+
+def migrate_dense_metrics(mc: MetricsCarry, bases: Sequence[int],
+                          send_step: np.ndarray, m: int) -> MetricsCarry:
+    """Re-embed a batched carry into the dense (base 0, W=M) layout.
+
+    Called only from the host loop's dense-migration path (which is
+    already a synchronization point).  Slots already retired out of the
+    ring are refilled from the host ``send_step`` dispatch mirror so
+    the carry stays exact across the fallback.
+    """
+    host = jax.device_get(mc)
+    st = np.asarray(host.send_time)
+    n_b, w = st.shape
+    dense = np.full((n_b, m), -1, dtype=np.int32)
+    for b in range(n_b):
+        lo = int(bases[b])
+        live = min(w, m - lo)
+        if live > 0:
+            dense[b, lo:lo + live] = st[b, :live]
+        if lo > 0:
+            dense[b, :lo] = send_step[b, :lo]
+    return MetricsCarry(
+        send_time=jnp.asarray(dense),
+        latency_hist=jnp.asarray(host.latency_hist),
+        occupancy_hwm=jnp.asarray(host.occupancy_hwm),
+        gc_lag_hwm=jnp.asarray(host.gc_lag_hwm),
+        quack_events=jnp.asarray(host.quack_events),
+        loss_events=jnp.asarray(host.loss_events),
+        resend_total=jnp.asarray(host.resend_total),
+        uncounted=jnp.asarray(host.uncounted),
+    )
+
+
+def resume_metrics_carry(w_slots: int, bases: Sequence[int],
+                         send_step: np.ndarray, m: int) -> MetricsCarry:
+    """Fresh batched carry for a replay resume.
+
+    Accumulators restart at zero (metrics cover the resumed segment);
+    ``send_time`` is seeded from the checkpointed dispatch mirror so
+    latencies of messages in flight across the boundary stay exact.
+    """
+    n_b = len(bases)
+    st = np.full((n_b, w_slots), -1, dtype=np.int32)
+    for b in range(n_b):
+        lo = int(bases[b])
+        live = max(0, min(w_slots, m - lo))
+        if live > 0:
+            st[b, :live] = send_step[b, lo:lo + live]
+    z = jnp.zeros((n_b,), dtype=jnp.int32)
+    return MetricsCarry(
+        send_time=jnp.asarray(st),
+        latency_hist=jnp.zeros((n_b, NUM_LATENCY_BUCKETS),
+                               dtype=jnp.int32),
+        occupancy_hwm=z,
+        gc_lag_hwm=z,
+        quack_events=z,
+        loss_events=z,
+        resend_total=z,
+        uncounted=z,
+    )
+
+
+def obs_from_carry(mc) -> ObsMetrics:
+    """Unbatched carry (one lane, e.g. the dense single-run path)."""
+    return ObsMetrics(
+        latency_hist=np.asarray(mc.latency_hist, dtype=np.int64),
+        occupancy_hwm=int(mc.occupancy_hwm),
+        gc_lag_hwm=int(mc.gc_lag_hwm),
+        quack_events=int(mc.quack_events),
+        loss_events=int(mc.loss_events),
+        resend_total=int(mc.resend_total),
+        uncounted=int(mc.uncounted),
+    )
+
+
+def obs_from_final(final_mc, blocks, lane: int) -> ObsMetrics:
+    """Build one lane's :class:`ObsMetrics` from the fetched final
+    carry plus the per-chunk :class:`MetricsBlock` drain parts."""
+    per_chunk = None
+    if blocks:
+        per_chunk = np.stack(
+            [np.asarray(b.latency_hist[lane], dtype=np.int64)
+             for b in blocks])
+    return ObsMetrics(
+        latency_hist=np.asarray(final_mc.latency_hist[lane],
+                                dtype=np.int64),
+        occupancy_hwm=int(final_mc.occupancy_hwm[lane]),
+        gc_lag_hwm=int(final_mc.gc_lag_hwm[lane]),
+        quack_events=int(final_mc.quack_events[lane]),
+        loss_events=int(final_mc.loss_events[lane]),
+        resend_total=int(final_mc.resend_total[lane]),
+        uncounted=int(final_mc.uncounted[lane]),
+        per_chunk_hist=per_chunk,
+    )

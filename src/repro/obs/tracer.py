@@ -1,0 +1,222 @@
+"""Host-side span tracer for the windowed engine's control loop.
+
+Monotonic-clock wall-time spans with *explicit* begin/end — the traced
+chunk programs never see a clock; all timestamps are taken in the host
+loop between dispatches, so jaxprs are unaffected (the PR 6 auditor
+stays green by construction).
+
+A :class:`SpanTracer` is installed for the dynamic extent of a run with
+:func:`tracing`; the engine's instrumentation points go through
+:func:`obs_begin` / :func:`obs_end`, which are no-ops (and take no
+clock samples) when no tracer is installed.
+
+Canonical span names emitted by the engine
+(``tests/test_obs.py`` asserts these):
+
+  ``run``             whole ``_run_windowed_batch`` invocation
+  ``compile``         a dispatch that traced at least one new program
+  ``dispatch``        enqueue of an already-compiled chunk/superchunk
+  ``drain_wait``      blocking ``device_get`` of a dispatch's queue;
+                      ``args.overlapped`` is True when the fetched
+                      dispatch had a successor already in flight
+                      (PR 5 double buffering doing its job)
+  ``plan_floors``     topology commit-floor planning callback
+  ``checkpoint``      recorder snapshot capture
+  ``window_growth``   adaptive 2x window growth (state re-pad)
+  ``dense_migration`` windowed -> dense layout fallback
+  ``final_flush``     terminal state fetch + retire scatter
+
+Export: :meth:`SpanTracer.export_chrome_trace` writes Chrome
+trace-event JSON loadable in Perfetto / ``chrome://tracing``;
+:meth:`SpanTracer.summary` renders a flamegraph-style text table.
+The PR 5 async double buffering becomes a first-class number via
+:meth:`SpanTracer.drain_overlap_ratio`.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+__all__ = [
+    "Span",
+    "SpanTracer",
+    "tracing",
+    "current_tracer",
+    "obs_begin",
+    "obs_end",
+    "obs_span",
+]
+
+
+@dataclass
+class Span:
+    """One closed wall-time interval."""
+
+    name: str
+    start_ns: int
+    dur_ns: int
+    cat: str = "host"
+    args: Dict[str, Any] = field(default_factory=dict)
+
+
+class SpanTracer:
+    """Collects :class:`Span` records against one monotonic origin."""
+
+    def __init__(self, pid: int = 0, tid: int = 0):
+        self.pid = pid
+        self.tid = tid
+        self.origin_ns = time.monotonic_ns()
+        self.spans: List[Span] = []
+
+    # -- recording ---------------------------------------------------
+
+    def begin(self) -> int:
+        return time.monotonic_ns()
+
+    def end(self, begin_ns: int, name: str, cat: str = "host",
+            **args: Any) -> Span:
+        sp = Span(name=name, start_ns=begin_ns,
+                  dur_ns=time.monotonic_ns() - begin_ns,
+                  cat=cat, args=dict(args))
+        self.spans.append(sp)
+        return sp
+
+    @contextmanager
+    def span(self, name: str, cat: str = "host", **args: Any):
+        b = self.begin()
+        try:
+            yield
+        finally:
+            self.end(b, name, cat, **args)
+
+    # -- queries -----------------------------------------------------
+
+    def names(self) -> List[str]:
+        return [s.name for s in self.spans]
+
+    def count(self, name: str) -> int:
+        return sum(1 for s in self.spans if s.name == name)
+
+    def total_ns(self, name: str) -> int:
+        return sum(s.dur_ns for s in self.spans if s.name == name)
+
+    def wall_ns(self) -> int:
+        if not self.spans:
+            return 0
+        end = max(s.start_ns + s.dur_ns for s in self.spans)
+        start = min(s.start_ns for s in self.spans)
+        return end - start
+
+    def drain_overlap_ratio(self) -> float:
+        """Fraction of drain-wait time spent with a successor dispatch
+        already in flight (1.0 = every drain overlapped compute)."""
+        tot = over = 0
+        for s in self.spans:
+            if s.name != "drain_wait":
+                continue
+            tot += s.dur_ns
+            if s.args.get("overlapped"):
+                over += s.dur_ns
+        return over / tot if tot else 0.0
+
+    # -- export ------------------------------------------------------
+
+    def to_chrome_trace(self) -> dict:
+        events = []
+        for s in self.spans:
+            events.append({
+                "name": s.name,
+                "cat": s.cat,
+                "ph": "X",
+                "ts": (s.start_ns - self.origin_ns) / 1000.0,
+                "dur": s.dur_ns / 1000.0,
+                "pid": self.pid,
+                "tid": self.tid,
+                "args": s.args,
+            })
+        events.sort(key=lambda e: e["ts"])
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def export_chrome_trace(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome_trace(), f, indent=None)
+        return path
+
+    def to_dict(self) -> dict:
+        return {
+            "origin_ns": self.origin_ns,
+            "drain_overlap_ratio": self.drain_overlap_ratio(),
+            "spans": [{
+                "name": s.name, "cat": s.cat,
+                "start_ns": s.start_ns - self.origin_ns,
+                "dur_ns": s.dur_ns, "args": s.args,
+            } for s in self.spans],
+        }
+
+    def summary(self) -> str:
+        """Flamegraph-style text rollup, widest spans first."""
+        agg: Dict[str, List[int]] = {}
+        for s in self.spans:
+            ent = agg.setdefault(s.name, [0, 0])
+            ent[0] += 1
+            ent[1] += s.dur_ns
+        wall = max(self.wall_ns(), 1)
+        lines = ["%-16s %6s %12s %10s %7s"
+                 % ("span", "count", "total_ms", "avg_ms", "%wall")]
+        for name, (n, tot) in sorted(agg.items(),
+                                     key=lambda kv: -kv[1][1]):
+            lines.append("%-16s %6d %12.3f %10.3f %6.1f%%"
+                         % (name, n, tot / 1e6, tot / 1e6 / n,
+                            100.0 * tot / wall))
+        lines.append("drain_overlap_ratio %.3f"
+                     % self.drain_overlap_ratio())
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Ambient tracer — engine hooks are no-ops unless one is installed.
+# ---------------------------------------------------------------------------
+
+_CURRENT: List[Optional[SpanTracer]] = [None]
+
+
+def current_tracer() -> Optional[SpanTracer]:
+    return _CURRENT[0]
+
+
+@contextmanager
+def tracing(tracer: SpanTracer):
+    """Install ``tracer`` as the ambient tracer for this block."""
+    prev = _CURRENT[0]
+    _CURRENT[0] = tracer
+    try:
+        yield tracer
+    finally:
+        _CURRENT[0] = prev
+
+
+def obs_begin() -> Optional[int]:
+    """Timestamp for a prospective span; None (no clock sample) when
+    tracing is disabled."""
+    tr = _CURRENT[0]
+    return tr.begin() if tr is not None else None
+
+
+def obs_end(begin_ns: Optional[int], name: str, cat: str = "host",
+            **args: Any) -> None:
+    tr = _CURRENT[0]
+    if tr is not None and begin_ns is not None:
+        tr.end(begin_ns, name, cat, **args)
+
+
+@contextmanager
+def obs_span(name: str, cat: str = "host", **args: Any):
+    b = obs_begin()
+    try:
+        yield
+    finally:
+        obs_end(b, name, cat, **args)

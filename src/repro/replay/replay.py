@@ -25,6 +25,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 from ..core.simulator import (SimResult, SimSpec, _run_windowed_batch,
                               spec_failures, spec_with_failures)
 from ..core.types import FailureScenario
+from ..obs.tracer import obs_span
 from ..topology.engine import (TopologyResult, _floor_plan, link_specs,
                                run_topology)
 from ..topology.graph import Topology
@@ -225,8 +226,9 @@ def replay(trace: RunTrace, from_step: int,
         raise ValueError(f"replay() takes a link trace, got "
                          f"{trace.kind!r}; use replay_topology()")
     ckpt, schedule = _prepare(trace, from_step, injections)
-    return _run_windowed_batch(trace.specs, resume=ckpt,
-                               fail_schedule=schedule)
+    with obs_span("replay_resume", cat="engine", from_step=int(ckpt.t)):
+        return _run_windowed_batch(trace.specs, resume=ckpt,
+                                   fail_schedule=schedule)
 
 
 def replay_topology(trace: RunTrace, from_step: int,
@@ -240,5 +242,6 @@ def replay_topology(trace: RunTrace, from_step: int,
         raise ValueError(f"replay_topology() takes a topology trace, "
                          f"got {trace.kind!r}")
     ckpt, schedule = _prepare(trace, from_step, injections)
-    return run_topology(trace.topology, resume=ckpt,
-                        fail_schedule=schedule)
+    with obs_span("replay_resume", cat="engine", from_step=int(ckpt.t)):
+        return run_topology(trace.topology, resume=ckpt,
+                            fail_schedule=schedule)

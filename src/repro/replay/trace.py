@@ -160,6 +160,8 @@ class RunTrace:
             arrays[p + "out_deliver"] = np.asarray(c.out_deliver)
             arrays[p + "out_retry"] = np.asarray(c.out_retry)
             arrays[p + "out_recv"] = np.asarray(c.out_recv)
+            if c.send_step is not None:
+                arrays[p + "send_step"] = np.asarray(c.send_step)
             arrays.update(state_to_arrays(c.state, p + "state."))
             arrays.update(state_to_arrays(c.fails, p + "fails."))
             # per-chunk metric blocks flatten to the (B, t) view on disk
@@ -195,6 +197,11 @@ class RunTrace:
                     growth_events=tuple(
                         WindowGrowthEvent(**e)
                         for e in cm["growth_events"]),
+                    # absent in pre-PR-8 traces: ChunkCheckpoint defaults
+                    # it to None and the engine falls back to the
+                    # schedule-derived dispatch rounds
+                    send_step=(d[p + "send_step"]
+                               if p + "send_step" in d else None),
                 ))
         topo = (_topology_from_json(meta["topology"])
                 if meta["topology"] is not None else None)

@@ -113,6 +113,8 @@ def _tile_checkpoint(ckpt: ChunkCheckpoint, n: int) -> ChunkCheckpoint:
                            for part in ckpt.metric_parts),
         bases_hist=rep(ckpt.bases_hist, axis=1),
         growth_events=ckpt.growth_events,
+        send_step=(None if ckpt.send_step is None
+                   else rep(ckpt.send_step)),
     )
 
 

@@ -38,6 +38,7 @@ import numpy as np
 
 from ..core.simulator import (SimResult, SimSpec, _run_windowed_batch,
                               build_spec, require_uniform_batch)
+from ..obs.tracer import obs_span
 from .graph import LinkSpec, Topology
 
 __all__ = ["LinkAccessors", "TopologyAccessors", "LinkResult",
@@ -155,9 +156,14 @@ def run_topology(topo: Topology, *, recorder=None, resume=None,
         floors_hist.append(floors.copy())
         return floors
 
-    results = _run_windowed_batch(specs, commit_floors=commit_floors,
-                                  recorder=recorder, resume=resume,
-                                  fail_schedule=fail_schedule)
+    # the engine wraps each commit_floors call in a "plan_floors" span;
+    # this outer span makes whole-graph sessions addressable in the
+    # exported timeline (repro.obs.tracer)
+    with obs_span("run_topology", cat="engine",
+                  links=[l.name for l in topo.links]):
+        results = _run_windowed_batch(specs, commit_floors=commit_floors,
+                                      recorder=recorder, resume=resume,
+                                      fail_schedule=fail_schedule)
     hist = np.stack(floors_hist)                  # (n_chunks, L)
     links = {
         l.name: LinkResult(link=l, result=r, commit_floors=hist[:, i])
