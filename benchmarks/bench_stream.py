@@ -1,0 +1,137 @@
+"""Streaming session driver: sustained throughput vs analytic capacity.
+
+Sweeps arrival process x horizon (plus a utilization ladder on the
+constant process) through ``repro.stream``'s resident-engine session
+and reports, per point, the sustained delivery rate as a **fraction of
+the analytic PICSOU capacity** (``core/network.py`` pricing at the
+session's fleet size), the live-path latency percentiles, and the
+deterministic dispatch counters — the headline is "X% of analytic
+capacity sustained at fleet size N", not a wall-clock number.
+
+Every warm run re-executes the identical session after a cold
+compile pass, so ``warm_s`` prices the resident steady state (drain +
+telemetry fold only), and ``problems`` carries the live-vs-device
+invariant: the merge-folded sketch must equal the device's final
+cumulative histogram bit-exactly on every row.
+
+  PYTHONPATH=src python -m benchmarks.bench_stream
+      [--horizons 8192,65536] [--kinds constant,diurnal,bursty,heavytail]
+      [--utils 0.25,0.5,0.9] [--json BENCH_stream.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core import RSMConfig, SimConfig
+from repro.stream import ArrivalProcess, StreamConfig, StreamSession
+
+HORIZONS = (8192, 65536)
+KINDS = ("constant", "diurnal", "bursty", "heavytail")
+UTILS = (0.25, 0.5, 0.9)
+SENDER = RSMConfig.bft(1)
+RECEIVER = RSMConfig.bft(1)
+
+
+def _sim() -> SimConfig:
+    return SimConfig(window=4, phi=6, window_slots="auto",
+                     chunk_steps=16, superchunk=8, debug_checks=False)
+
+
+def _session(kind: str, horizon: int, rate: float,
+             utilization=None) -> StreamSession:
+    process = ArrivalProcess(kind=kind, rate=rate, seed=0)
+    cfg = StreamConfig(horizon=horizon, process=process,
+                       utilization=utilization, report_every=8)
+    return StreamSession(SENDER, RECEIVER, _sim(), cfg)
+
+
+def _measure(kind: str, horizon: int, rate: float, utilization=None):
+    session = _session(kind, horizon, rate, utilization)
+    t0 = time.time()
+    session.run()
+    cold = time.time() - t0
+    t0 = time.time()
+    res = session.run()
+    warm = time.time() - t0
+    cap = res.capacity
+    p = res.percentiles()
+    return {
+        "kind": kind,
+        "horizon": horizon,
+        "utilization": utilization,
+        "rate_msgs_per_round": cap["offered_msgs_per_round"],
+        "offered_frac": cap["offered_frac"],
+        "sustained_msgs_per_s": cap["sustained_msgs_per_s"],
+        "sustained_frac": cap["sustained_frac"],
+        "fleet": cap["fleet"],
+        "bottleneck": cap["bottleneck"],
+        "p50": p["p50"], "p99": p["p99"],
+        "window_slots": res.final_window_slots,
+        "dispatches": res.counters["dispatches"],
+        "chunks_drained": res.counters["chunks_drained"],
+        "live_rows": res.counters["live_rows"],
+        "slo_events": len(res.slo_events),
+        "cold_s": cold,
+        "warm_s": warm,
+        "delivered": res.delivered,
+        "complete": res.delivered == horizon,
+        "problems": list(res.problems),
+    }
+
+
+def rows(horizons=HORIZONS, kinds=KINDS, utils=UTILS):
+    out = []
+    for h in horizons:
+        for kind in kinds:
+            out.append(_measure(kind, h, rate=6.0))
+    for u in utils:
+        out.append(_measure("constant", min(horizons), rate=1.0,
+                            utilization=u))
+    return out
+
+
+def main(horizons=HORIZONS, kinds=KINDS, utils=UTILS, json_path=None):
+    rs = rows(horizons, kinds, utils)
+    print("# streaming session driver (BFT1<->BFT1, window=4, K=8; "
+          "sustained rate priced vs analytic capacity)")
+    print("kind,horizon,util,offered_frac,sustained_frac,"
+          "sustained_msgs_per_s,p99,window_slots,dispatches,warm_s,"
+          "complete")
+    for r in rs:
+        util = f"{r['utilization']:.2f}" if r["utilization"] else "-"
+        print(f"{r['kind']},{r['horizon']},{util},"
+              f"{r['offered_frac']:.3f},{r['sustained_frac']:.3f},"
+              f"{r['sustained_msgs_per_s']:.0f},{r['p99']},"
+              f"{r['window_slots']},{r['dispatches']},"
+              f"{r['warm_s']:.2f},{r['complete']}")
+        for p in r["problems"]:
+            print(f"#   PROBLEM: {p}")
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump(rs, f, indent=1, default=float)
+        print(f"# wrote {json_path}")
+    return rs
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--horizons", type=str, default=None,
+                    help="comma-separated horizons (default 8192,65536); "
+                         "tiny values make a CI smoke")
+    ap.add_argument("--kinds", type=str, default=None,
+                    help="comma-separated arrival kinds (default all 4)")
+    ap.add_argument("--utils", type=str, default=None,
+                    help="comma-separated utilization ladder for the "
+                         "capacity-calibrated section (default "
+                         "0.25,0.5,0.9; empty string disables)")
+    ap.add_argument("--json", type=str, default=None)
+    args = ap.parse_args()
+    horizons = (tuple(int(s) for s in args.horizons.split(","))
+                if args.horizons else HORIZONS)
+    kinds = (tuple(args.kinds.split(",")) if args.kinds else KINDS)
+    utils = (tuple(float(s) for s in args.utils.split(",") if s)
+             if args.utils is not None else UTILS)
+    main(horizons, kinds, utils, args.json)

@@ -126,6 +126,19 @@ def topology():
             f"{big['warm_s']:.2f}s,chain_lag={lag}rounds")
 
 
+def stream():
+    from benchmarks import bench_stream as m
+    rs = m.main(json_path="BENCH_stream.json")
+    cal = [r for r in rs if r.get("utilization")]
+    if cal:
+        best = max(cal, key=lambda r: r["utilization"])
+        return (f"sustained={best['sustained_frac']:.0%}_of_capacity"
+                f"@u={best['utilization']:.2f},fleet={best['fleet']},"
+                f"p99={best['p99']}")
+    big = max(rs, key=lambda r: r["horizon"])
+    return f"sustained={big['sustained_frac']:.0%}_of_capacity"
+
+
 def replay():
     from benchmarks import bench_replay as m
     rs = m.main(json_path="BENCH_replay.json")
@@ -162,8 +175,54 @@ TABLES = (("fig8_scalability", fig8, None),
           ("pipeline", pipeline, "BENCH_pipeline.json"),
           ("topology_apps", topology, "BENCH_topology.json"),
           ("replay_whatif", replay, "BENCH_replay.json"),
+          ("stream", stream, "BENCH_stream.json"),
           ("kernels", kernels, None),
           ("crosspod_collectives", crosspod, None))
+
+# regression gate knobs for --compare: a section regresses when its wall
+# time grows by more than REGRESSION_FRAC over the prior summary AND the
+# absolute growth clears REGRESSION_FLOOR_S (sub-second jitter on tiny
+# sections is not a regression)
+REGRESSION_FRAC = 0.15
+REGRESSION_FLOOR_S = 1.0
+
+
+def compare_summaries(prev: dict, cur: dict,
+                      frac: float = REGRESSION_FRAC,
+                      floor_s: float = REGRESSION_FLOOR_S):
+    """Diff two BENCH_summary.json documents section-by-section.
+
+    Returns ``(lines, regressions)`` — a printable report over every
+    section present in both summaries (wall-time delta + derived-metric
+    change), and the subset of lines that constitute wall-time
+    regressions (> ``frac`` slower AND > ``floor_s`` absolute growth,
+    ok-status sections only). New/removed sections are reported but are
+    never regressions.
+    """
+    pv = {s["name"]: s for s in prev.get("sections", ())}
+    cv = {s["name"]: s for s in cur.get("sections", ())}
+    lines, regressions = [], []
+    for name, c in cv.items():
+        p = pv.get(name)
+        if p is None:
+            lines.append(f"  {name}: new section "
+                         f"({c.get('seconds', 0):.2f}s)")
+            continue
+        ps, cs = float(p.get("seconds", 0)), float(c.get("seconds", 0))
+        delta = cs - ps
+        ratio = (cs / ps - 1.0) if ps > 0 else 0.0
+        line = f"  {name}: {ps:.2f}s -> {cs:.2f}s ({ratio:+.0%})"
+        if p.get("derived") != c.get("derived"):
+            line += f"; derived {p.get('derived')} -> {c.get('derived')}"
+        if (p.get("status"), c.get("status")) != ("ok", "ok"):
+            line += (f"; status {p.get('status')} -> {c.get('status')}")
+        elif ratio > frac and delta > floor_s:
+            line += "  ** REGRESSION"
+            regressions.append(line)
+        lines.append(line)
+    for name in pv.keys() - cv.keys():
+        lines.append(f"  {name}: section missing from current run")
+    return lines, regressions
 
 
 def obs_metrics_section(n_msgs: int = 4096, k: int = 8) -> dict:
@@ -186,6 +245,7 @@ def obs_metrics_section(n_msgs: int = 4096, k: int = 8) -> dict:
                   "window_slots": report.meta["window_slots"]},
         "obs": report.obs["link"].to_dict(),
         "drain_overlap_ratio": span["drain_overlap_ratio"],
+        "no_drains": span.get("no_drains", False),
         "span_totals_ms": _span_totals_ms(span),
         "dispatches": report.meta["chunk_dispatches"],
         "validated": not problems,
@@ -229,6 +289,11 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated section names to run")
     ap.add_argument("--summary-json", default="BENCH_summary.json")
+    ap.add_argument("--compare", default=None, metavar="PREV_summary.json",
+                    help="after the run, diff the fresh summary against "
+                         "this prior BENCH_summary.json and exit nonzero "
+                         "on a >15%% warm wall-time regression in any "
+                         "section (small absolute deltas are ignored)")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -285,7 +350,28 @@ def main(argv=None) -> int:
     print("\n== summary (name,us_per_call,derived) ==")
     for s in summary:
         print(f"{s['name']},{s['seconds'] * 1e6:.0f},{s['derived']}")
-    return 0 if all(s["status"] == "ok" for s in summary) else 1
+
+    rc = 0 if all(s["status"] == "ok" for s in summary) else 1
+    if args.compare:
+        print(f"\n== compare vs {args.compare} ==")
+        try:
+            with open(args.compare) as f:
+                prev = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"  (no usable baseline: {e})")
+            return rc
+        lines, regressions = compare_summaries(
+            prev, {"sections": summary})
+        for line in lines:
+            print(line)
+        if regressions:
+            print(f"\n{len(regressions)} wall-time regression(s) "
+                  f"(>{REGRESSION_FRAC:.0%} and "
+                  f">{REGRESSION_FLOOR_S:.0f}s slower)")
+            rc = rc or 2
+        else:
+            print("no wall-time regressions")
+    return rc
 
 
 if __name__ == "__main__":

@@ -210,7 +210,13 @@ def audit_engine(m: int = 64, window_slots: int = 16,
                            ``(SimState, MetricsCarry)``): the
                            observability layer must satisfy the exact
                            same cleanliness contract as the bare engine
-                           (no callbacks, no widenings, donated carry).
+                           (no callbacks, no widenings, donated carry);
+    * ``chunk_stream`` / ``superchunk_stream`` — horizon-mode programs
+                           staged at a ``repro.stream`` spec (arrival-
+                           driven ``orig_step``, load-sized window,
+                           metrics carry feeding the live drain sink):
+                           the resident streaming service runs these
+                           exact programs over unbounded horizons.
     """
     import dataclasses as dc
 
@@ -285,6 +291,56 @@ def audit_engine(m: int = 64, window_slots: int = 16,
         sc_obs, (bfails, bcarry, t0, needs), "superchunk_obs",
         donate=donate,
         lowered_text=(sc_obs.lower(bfails, bcarry, t0, needs).as_text()
+                      if with_lowered else None)))
+
+    # horizon-mode (streaming-session) programs: the same chunk /
+    # superchunk constructors, staged at a *stream* spec — an
+    # arrival-process ``orig_step`` schedule, a load-sized window from
+    # ``stream_window_slots`` and the metrics carry that feeds the live
+    # drain sink. The resident-service hot path must satisfy the exact
+    # same cleanliness contract as the batch engine; the import is lazy
+    # (repro.stream sits above repro.analysis in the layer order).
+    from ..core import RSMConfig, SimConfig
+    from ..stream.workload import ArrivalProcess, build_stream_spec
+    sspec = build_stream_spec(
+        RSMConfig.bft(1), RSMConfig.bft(1),
+        SimConfig(window=1, phi=6, window_slots="auto",
+                  chunk_steps=chunk_steps, superchunk=superchunk),
+        ArrivalProcess(kind="constant", rate=4.0), horizon=m)
+    s_cspec = dc.replace(_neutral(sspec), steps=0)
+    sw, s_c, s_k = (sspec.window_slots, sspec.chunk_steps,
+                    sspec.superchunk)
+    sfails = _fail_arrays(sspec)
+    sbfails = jax.tree_util.tree_map(lambda x: jnp.broadcast_to(
+        x, (1,) + jnp.shape(x)), sfails)
+    sbcarry = (
+        jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (1,) + x.shape),
+            _init_state(s_cspec, sw)),
+        jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (1,) + jnp.shape(x)),
+            init_metrics_carry(sw)))
+    fn_stream = jax.vmap(_build_chunk(s_cspec, sw, s_c, True),
+                         in_axes=(0, 0, None))
+    audits.append(audit_callable(
+        fn_stream, (sbfails, sbcarry, t0), "chunk_stream",
+        donate=donate,
+        lowered_text=(jax.jit(fn_stream, donate_argnums=donate)
+                      .lower(sbfails, sbcarry, t0).as_text()
+                      if with_lowered else None)))
+    s_by = _max_msg_by_round(sspec)
+    s_needs = jnp.asarray(np.minimum(
+        s_by[s_c - 1::s_c][:s_k], sspec.m).astype(np.int32))
+    if s_needs.shape[0] < s_k:
+        s_needs = jnp.concatenate(
+            [s_needs,
+             jnp.full((s_k - s_needs.shape[0],), sspec.m, jnp.int32)])
+    sc_stream = _compiled_batch_superchunk(s_cspec, sw, s_c, s_k)
+    audits.append(audit_callable(
+        sc_stream, (sbfails, sbcarry, t0, s_needs), "superchunk_stream",
+        donate=donate,
+        lowered_text=(sc_stream.lower(sbfails, sbcarry, t0,
+                                      s_needs).as_text()
                       if with_lowered else None)))
 
     n_chunks = -(-spec.steps // c)

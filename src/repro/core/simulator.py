@@ -1182,6 +1182,7 @@ def _concat_metrics(n_b: int, metric_parts) -> StepMetrics:
 def _run_windowed_batch(specs: List[SimSpec], commit_floors=None, *,
                         fail_schedule=None, recorder=None,
                         resume: Optional[ChunkCheckpoint] = None,
+                        drain_sink=None,
                         ) -> List[SimResult]:
     """Windowed batch entry point; see ``_run_windowed_batch_impl``.
 
@@ -1199,10 +1200,11 @@ def _run_windowed_batch(specs: List[SimSpec], commit_floors=None, *,
             with engine_guard():
                 return _run_windowed_batch_impl(
                     specs, commit_floors, fail_schedule=fail_schedule,
-                    recorder=recorder, resume=resume)
+                    recorder=recorder, resume=resume,
+                    drain_sink=drain_sink)
         return _run_windowed_batch_impl(
             specs, commit_floors, fail_schedule=fail_schedule,
-            recorder=recorder, resume=resume)
+            recorder=recorder, resume=resume, drain_sink=drain_sink)
     finally:
         obs_end(_tr, "run", cat="engine", lanes=len(specs),
                 steps=specs[0].steps if specs else 0)
@@ -1211,6 +1213,7 @@ def _run_windowed_batch(specs: List[SimSpec], commit_floors=None, *,
 def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
                              fail_schedule=None, recorder=None,
                              resume: Optional[ChunkCheckpoint] = None,
+                             drain_sink=None,
                              ) -> List[SimResult]:
     """Batched windowed sweep: per-scenario failure masks AND window bases.
 
@@ -1262,6 +1265,23 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
     ``capture(ChunkCheckpoint)``) captures chunk-boundary checkpoints;
     ``resume`` restarts the loop from a previously captured checkpoint —
     the replay subsystem's entry points (``repro.replay``).
+
+    ``drain_sink`` switches the loop into **horizon mode** (the
+    ``repro.stream`` session driver): M is treated as a message horizon
+    rather than an allocation. No (B, ..., M) output mirrors are built —
+    every drained chunk is retired *online* into the sink
+    (``sink.on_chunk(t_end, metrics, queue, block, bases)`` per inner
+    chunk, ``sink.on_final(state, metrics_carry, bases, w, events, t)``
+    after the terminal flush) and the call returns ``[]`` instead of
+    per-lane ``SimResult``\\ s. Host memory per dispatch is O(B * W);
+    the dispatch/fusion structure is byte-identical to batch mode (the
+    sink rides the drains that already happen), so the zero-extra-
+    dispatch contract is held by construction. Requires
+    ``collect_metrics`` (the blocks *are* the live feed) and is mutually
+    exclusive with ``recorder``/``resume`` (checkpoints capture O(M)
+    mirrors that horizon mode never materializes); window growth stays
+    available but the dense-layout fallback (O(M) state) raises instead
+    of silently allocating the horizon.
     """
     spec0 = specs[0]
     n_b = len(specs)
@@ -1269,6 +1289,39 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
     cspec = dataclasses.replace(nspec, steps=0)
     n_s, n_r, m = spec0.n_s, spec0.n_r, spec0.m
     c_full = max(spec0.chunk_steps, 1)
+
+    if drain_sink is not None:
+        if recorder is not None or resume is not None:
+            raise ValueError("drain_sink (horizon mode) is incompatible "
+                             "with recorder/resume: checkpoints capture "
+                             "the O(M) output mirrors horizon mode "
+                             "exists to avoid")
+        if not spec0.collect_metrics:
+            raise ValueError("drain_sink requires collect_metrics=True: "
+                             "the MetricsBlock snapshots riding the "
+                             "drain are the live telemetry feed")
+
+    # Per-run program lookup: the lru_cached constructors hash the whole
+    # frozen spec — including O(M) schedule tuples — on every call,
+    # which horizon-scale runs (M ~ 1e6, thousands of dispatches) cannot
+    # afford. Key by the only fields that vary inside one run.
+    progs: dict = {}
+
+    def chunk_prog(w_slots: int, c_len: int, rotate: bool):
+        key = (w_slots, c_len, rotate, 1)
+        fn = progs.get(key)
+        if fn is None:
+            fn = progs[key] = _compiled_batch_chunk(cspec, w_slots,
+                                                    c_len, rotate)
+        return fn
+
+    def super_prog(w_slots: int, c_len: int, k: int):
+        key = (w_slots, c_len, True, k)
+        fn = progs.get(key)
+        if fn is None:
+            fn = progs[key] = _compiled_batch_superchunk(cspec, w_slots,
+                                                         c_len, k)
+        return fn
 
     dispatched_by = _max_msg_by_round(spec0)
     collect = spec0.collect_metrics
@@ -1278,13 +1331,17 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
     # when on — the two accessors keep the loop body branch-free
     _sim = (lambda cy: cy[0]) if collect else (lambda cy: cy)
 
+    retain = drain_sink is None       # batch mode: O(M) host mirrors
     if resume is None:
         w = spec0.window_slots
         fails = _stacked_fails(specs)
-        out_quack = np.full((n_b, n_s, m), -1, dtype=np.int32)
-        out_deliver = np.full((n_b, m), -1, dtype=np.int32)
-        out_retry = np.zeros((n_b, n_s, m), dtype=np.int32)
-        out_recv = np.zeros((n_b, n_r, m), dtype=bool)
+        if retain:
+            out_quack = np.full((n_b, n_s, m), -1, dtype=np.int32)
+            out_deliver = np.full((n_b, m), -1, dtype=np.int32)
+            out_retry = np.zeros((n_b, n_s, m), dtype=np.int32)
+            out_recv = np.zeros((n_b, n_r, m), dtype=bool)
+        else:
+            out_quack = out_deliver = out_retry = out_recv = None
         carry = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (n_b,) + x.shape),
             _init_state(nspec, w))
@@ -1300,7 +1357,9 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
         growth_events: List[WindowGrowthEvent] = []
         # per-message dispatch-round mirror (commit-floor aware): filled
         # as floors open, feeds SimResult.delivery_latency + checkpoints
-        send_step = np.full((n_b, m), -1, dtype=np.int64)
+        # (horizon mode drops it — another O(M) buffer)
+        send_step = (np.full((n_b, m), -1, dtype=np.int64)
+                     if retain else None)
         open_floor = np.zeros(n_b, dtype=np.int64)
     else:
         if len(resume.bases) != n_b:
@@ -1375,10 +1434,15 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
                 bp = None if blk is None else MetricsBlock(
                     *(getattr(blk, name)[i]
                       for name in MetricsBlock._fields))
-            metric_parts.append(StepMetrics(*(np.asarray(x) for x in msp)))
-            if bp is not None:
-                obs_parts.append(bp)
+            msp = StepMetrics(*(np.asarray(x) for x in msp))
+            if retain:
+                metric_parts.append(msp)
+                if bp is not None:
+                    obs_parts.append(bp)
             if not ent["rotate"]:
+                if not retain:
+                    drain_sink.on_chunk(ent["t0"] + (i + 1) * ent["c"],
+                                        msp, qp, bp, bases.copy())
                 continue               # final chunk: nothing retired
             # the host's base mirror must track the in-graph rotation
             # exactly; the comparison is debug-gated so steady-state
@@ -1386,12 +1450,21 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
             if debug and not (np.asarray(qp.base) == bases).all():
                 raise RuntimeError(
                     "window base mirror diverged from device rotation")
-            bases = _scatter_retired(
-                bases, qp.count,
-                (np.asarray(qp.quack_time), np.asarray(qp.deliver_time),
-                 np.asarray(qp.retry), np.asarray(qp.recv_has)),
-                (out_quack, out_deliver, out_retry, out_recv))
-            bases_hist.append(bases.copy())
+            if retain:
+                bases = _scatter_retired(
+                    bases, qp.count,
+                    (np.asarray(qp.quack_time),
+                     np.asarray(qp.deliver_time),
+                     np.asarray(qp.retry), np.asarray(qp.recv_has)),
+                    (out_quack, out_deliver, out_retry, out_recv))
+                bases_hist.append(bases.copy())
+            else:
+                # horizon mode: the chunk's outputs retire into the
+                # sink instead of (B, ..., M) mirrors — O(B * W) per
+                # drain, independent of how far the stream has run
+                bases = bases + np.asarray(qp.count, dtype=np.int64)
+                drain_sink.on_chunk(ent["t0"] + (i + 1) * ent["c"],
+                                    msp, qp, bp, bases.copy())
 
     def drain_all() -> None:
         while pending:
@@ -1446,7 +1519,7 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
         # boundary dispatch their newly-committed messages at
         # max(schedule round, now) — standalone links (floor = M at
         # t = 0) reduce to the schedule rounds exactly
-        if (floors > open_floor).any():
+        if send_step is not None and (floors > open_floor).any():
             for b in np.nonzero(floors > open_floor)[0]:
                 ks = np.arange(open_floor[b], floors[b])
                 send_step[b, ks] = np.maximum(ostep[ks], t)
@@ -1473,6 +1546,14 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
                 new_w=m if new_w is None else new_w,
                 dense_migration=new_w is None))
             if new_w is None:
+                if not retain:
+                    raise RuntimeError(
+                        "stream session window overflow: the dense "
+                        "fallback would allocate the full horizon "
+                        f"(W={w} -> M={m}); size the stream window for "
+                        "the offered load (see repro.stream.workload."
+                        "stream_window_slots) or lower the arrival "
+                        "rate")
                 _tg = obs_begin()
                 sim_state = _migrate_dense_batch(
                     spec0, _sim(carry), bases, out_quack,
@@ -1532,8 +1613,7 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
         traces_before = _CHUNK_TRACES[0]
         blk = None
         if k == 1:
-            res = _compiled_batch_chunk(cspec, w, c, not last)(
-                fails, carry, jnp.int32(t))
+            res = chunk_prog(w, c, not last)(fails, carry, jnp.int32(t))
             if collect:
                 carry, ms, queue, blk = res
             else:
@@ -1542,9 +1622,8 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
         else:
             needs = np.asarray(dispatched_by[t + c - 1:t + k * c:c],
                                dtype=np.int32)
-            res = _compiled_batch_superchunk(
-                cspec, w, c, k)(fails, carry, jnp.int32(t),
-                                jnp.asarray(needs))
+            res = super_prog(w, c, k)(fails, carry, jnp.int32(t),
+                                      jnp.asarray(needs))
             if collect:
                 carry, ms, queue, oks, blk = res
             else:
@@ -1568,12 +1647,18 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
     final = _sim(got)                  # the metrics carry when enabled
     final_mc = got[1] if collect else None
     _HOST_SYNCS[0] += 1
-    _scatter_retired(
-        bases, np.minimum(w, m - bases).clip(min=0),
-        (final.quack_time, final.deliver_time, final.retry,
-         final.recv_has),
-        (out_quack, out_deliver, out_retry, out_recv))
+    if retain:
+        _scatter_retired(
+            bases, np.minimum(w, m - bases).clip(min=0),
+            (final.quack_time, final.deliver_time, final.retry,
+             final.recv_has),
+            (out_quack, out_deliver, out_retry, out_recv))
     obs_end(_tf, "final_flush", cat="drain")
+
+    if not retain:
+        drain_sink.on_final(final, final_mc, bases.copy(), w,
+                            tuple(growth_events), t)
+        return []
 
     # sanitize the dispatch mirror: a round beyond the run never fired
     ss_all = np.where((send_step >= 0) & (send_step < spec0.steps),

@@ -7,6 +7,9 @@ Three parts (ISSUE 8):
     occupancy/GC-lag high-water marks, quorum trigger counts).
   * :mod:`repro.obs.tracer` — host-side monotonic-clock span tracer
     with Chrome-trace/Perfetto export and drain-overlap ratio.
+  * :mod:`repro.obs.live` — online aggregation over the live drain
+    feed (mergeable latency sketches, windowed rates, trend lines, SLO
+    watchdogs, ``LiveReport``) consumed by ``repro.stream``.
   * :mod:`repro.obs.report` — merges device metrics + host spans into
     one ``RunReport`` (npz+json); CLI via ``python -m repro.obs``.
 
@@ -15,6 +18,16 @@ so this package init deliberately pulls in only the cycle-free halves;
 import ``repro.obs.report`` directly (it is not re-exported here).
 """
 
+from .live import (  # noqa: F401
+    LatencySketch,
+    LiveAggregator,
+    LiveReport,
+    LiveSample,
+    SLOConfig,
+    SLOEvent,
+    SLOWatchdog,
+    TrendLine,
+)
 from .metrics import (  # noqa: F401
     LATENCY_BUCKET_EDGES,
     NUM_LATENCY_BUCKETS,
@@ -22,10 +35,12 @@ from .metrics import (  # noqa: F401
     MetricsCarry,
     ObsMetrics,
     bucket_label,
+    delta_metrics_block,
     init_metrics_carry,
     latency_bucket,
     latency_bucket_np,
     latency_histogram_np,
+    merge_metrics_blocks,
     migrate_dense_metrics,
     obs_from_carry,
     obs_from_final,
@@ -35,8 +50,11 @@ from .metrics import (  # noqa: F401
     rotate_metrics,
     snapshot_metrics,
     update_metrics,
+    zero_metrics_block,
 )
 from .tracer import (  # noqa: F401
+    CounterSample,
+    InstantEvent,
     Span,
     SpanTracer,
     current_tracer,

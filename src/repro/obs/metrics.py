@@ -42,6 +42,9 @@ __all__ = [
     "rotate_metrics",
     "pad_metrics",
     "snapshot_metrics",
+    "zero_metrics_block",
+    "delta_metrics_block",
+    "merge_metrics_blocks",
     "latency_bucket",
     "latency_bucket_np",
     "latency_histogram_np",
@@ -177,6 +180,58 @@ def pad_metrics(mc: MetricsCarry, new_w: int) -> MetricsCarry:
 def snapshot_metrics(mc: MetricsCarry) -> MetricsBlock:
     """Scalar accumulators only — what rides the drain."""
     return MetricsBlock(*(getattr(mc, f) for f in MetricsBlock._fields))
+
+
+# Block algebra (host-side numpy).  Snapshots drained from the engine
+# are *cumulative*: the block after chunk i holds totals since round 0.
+# ``delta_metrics_block`` turns consecutive snapshots into per-interval
+# sketches; ``merge_metrics_blocks`` recombines any grouping of those
+# sketches.  Counters are integer-additive and HWMs are maxes of a
+# monotone sequence, so folds are exact (bit-identical) in any
+# association order — the property ``tests/test_stream.py`` checks.
+
+_BLOCK_ADDITIVE = ("latency_hist", "quack_events", "loss_events",
+                   "resend_total", "uncounted")
+_BLOCK_HWM = ("occupancy_hwm", "gc_lag_hwm")
+
+
+def _block_np(b: MetricsBlock) -> MetricsBlock:
+    return MetricsBlock(*(np.asarray(v, dtype=np.int64) for v in b))
+
+
+def zero_metrics_block(n_lanes: Optional[int] = None) -> MetricsBlock:
+    """Identity element for :func:`merge_metrics_blocks` (numpy)."""
+    lead = () if n_lanes is None else (n_lanes,)
+    return MetricsBlock(
+        latency_hist=np.zeros(lead + (NUM_LATENCY_BUCKETS,),
+                              dtype=np.int64),
+        **{f: np.zeros(lead, dtype=np.int64)
+           for f in MetricsBlock._fields if f != "latency_hist"})
+
+
+def delta_metrics_block(prev: Optional[MetricsBlock],
+                        cur: MetricsBlock) -> MetricsBlock:
+    """Per-interval sketch between two cumulative snapshots.
+
+    Additive counters subtract; HWMs keep ``cur`` (the running max is
+    monotone, so re-merging deltas restores the end-of-run max).
+    ``prev=None`` means the start of the stream (all-zero baseline).
+    """
+    cur = _block_np(cur)
+    if prev is None:
+        return cur
+    prev = _block_np(prev)
+    return cur._replace(**{f: getattr(cur, f) - getattr(prev, f)
+                           for f in _BLOCK_ADDITIVE})
+
+
+def merge_metrics_blocks(a: MetricsBlock, b: MetricsBlock) -> MetricsBlock:
+    """Exact merge of two interval sketches (add counters, max HWMs)."""
+    a, b = _block_np(a), _block_np(b)
+    out = {f: getattr(a, f) + getattr(b, f) for f in _BLOCK_ADDITIVE}
+    out.update({f: np.maximum(getattr(a, f), getattr(b, f))
+                for f in _BLOCK_HWM})
+    return MetricsBlock(**out)
 
 
 # ---------------------------------------------------------------------------

@@ -52,9 +52,11 @@ def validate_chrome_trace(doc: dict) -> List[str]:
     """Schema-check a Chrome Trace Event Format document.
 
     Returns a list of problems (empty = valid): the subset Perfetto /
-    ``chrome://tracing`` require for complete ("ph": "X") events —
-    ``traceEvents`` list, per-event name/cat/ph/ts/dur/pid/tid with
-    numeric non-negative durations and JSON-serializable args.
+    ``chrome://tracing`` require for the event phases the tracer emits —
+    complete spans ("ph": "X", with a non-negative numeric ``dur``),
+    counter-track samples ("ph": "C", with all-numeric ``args``) and
+    instant markers ("ph": "i") — plus ``traceEvents`` list shape,
+    per-event name/cat/ts/pid/tid and JSON-serializable args.
     """
     problems: List[str] = []
     if not isinstance(doc, dict):
@@ -69,14 +71,30 @@ def validate_chrome_trace(doc: dict) -> List[str]:
             problems.append(f"{where}: not a dict")
             continue
         for key, types in (("name", str), ("cat", str), ("ph", str),
-                           ("ts", (int, float)), ("dur", (int, float)),
+                           ("ts", (int, float)),
                            ("pid", int), ("tid", int), ("args", dict)):
             if not isinstance(e.get(key), types):
                 problems.append(f"{where}: bad/missing {key!r}")
-        if e.get("ph") != "X":
-            problems.append(f"{where}: ph={e.get('ph')!r}, expected 'X'")
+        ph = e.get("ph")
         if isinstance(e.get("dur"), (int, float)) and e["dur"] < 0:
             problems.append(f"{where}: negative dur")
+        if ph == "X":
+            if not isinstance(e.get("dur"), (int, float)):
+                problems.append(f"{where}: bad/missing 'dur'")
+        elif ph == "C":
+            args = e.get("args")
+            if isinstance(args, dict) and (
+                    not args or any(not isinstance(v, (int, float))
+                                    for v in args.values())):
+                problems.append(f"{where}: counter args must be "
+                                f"non-empty numeric")
+        elif ph == "i":
+            if e.get("s") not in (None, "g", "p", "t"):
+                problems.append(f"{where}: bad instant scope "
+                                f"{e.get('s')!r}")
+        else:
+            problems.append(f"{where}: ph={ph!r}, expected one of "
+                            f"'X'/'C'/'i'")
         if isinstance(e.get("ts"), (int, float)):
             if last_ts is not None and e["ts"] < last_ts:
                 problems.append(f"{where}: ts not sorted")
@@ -125,10 +143,18 @@ class RunReport:
                 rows.append("%-10s %d" % (bucket_label(i), int(c)))
         return "\n".join(rows)
 
+    def no_drains(self) -> bool:
+        """True when the traced run recorded zero drain spans (the
+        overlap ratio is then vacuously 0.0, not a pipelining failure)."""
+        return bool(self.spans.get("no_drains", False))
+
     def summary(self) -> str:
         parts = [self.percentile_table()]
-        ratio = self.spans.get("drain_overlap_ratio", 0.0)
-        parts.append("drain_overlap_ratio %.3f" % ratio)
+        if self.no_drains():
+            parts.append("drain_overlap_ratio n/a (no_drains)")
+        else:
+            ratio = self.spans.get("drain_overlap_ratio", 0.0)
+            parts.append("drain_overlap_ratio %.3f" % ratio)
         if self.meta:
             parts.append("meta " + json.dumps(self.meta, sort_keys=True,
                                               default=str))

@@ -43,6 +43,8 @@ from typing import Any, Dict, List, Optional
 
 __all__ = [
     "Span",
+    "CounterSample",
+    "InstantEvent",
     "SpanTracer",
     "tracing",
     "current_tracer",
@@ -63,19 +65,59 @@ class Span:
     args: Dict[str, Any] = field(default_factory=dict)
 
 
+@dataclass
+class CounterSample:
+    """One sample on a named Perfetto counter track (``ph: "C"``)."""
+
+    name: str
+    ts_ns: int
+    values: Dict[str, float] = field(default_factory=dict)
+
+
+@dataclass
+class InstantEvent:
+    """One point-in-time marker (``ph: "i"``) — e.g. an SLO breach."""
+
+    name: str
+    ts_ns: int
+    cat: str = "host"
+    args: Dict[str, Any] = field(default_factory=dict)
+
+
 class SpanTracer:
-    """Collects :class:`Span` records against one monotonic origin."""
+    """Collects :class:`Span` records against one monotonic origin.
+
+    Besides duration spans it carries two live-telemetry event kinds:
+    counter samples (numeric track values — throughput, backlog, p99 —
+    rendered as Perfetto counter tracks) and instant events (SLO
+    watchdog breaches / recoveries on the same timeline).
+    """
 
     def __init__(self, pid: int = 0, tid: int = 0):
         self.pid = pid
         self.tid = tid
         self.origin_ns = time.monotonic_ns()
         self.spans: List[Span] = []
+        self.counters: List[CounterSample] = []
+        self.instants: List[InstantEvent] = []
 
     # -- recording ---------------------------------------------------
 
     def begin(self) -> int:
         return time.monotonic_ns()
+
+    def counter(self, name: str, **values: float) -> CounterSample:
+        cs = CounterSample(name=name, ts_ns=time.monotonic_ns(),
+                           values={k: float(v) for k, v in values.items()})
+        self.counters.append(cs)
+        return cs
+
+    def instant(self, name: str, cat: str = "host",
+                **args: Any) -> InstantEvent:
+        ev = InstantEvent(name=name, ts_ns=time.monotonic_ns(),
+                          cat=cat, args=dict(args))
+        self.instants.append(ev)
+        return ev
 
     def end(self, begin_ns: int, name: str, cat: str = "host",
             **args: Any) -> Span:
@@ -111,9 +153,19 @@ class SpanTracer:
         start = min(s.start_ns for s in self.spans)
         return end - start
 
+    def no_drains(self) -> bool:
+        """True when the run recorded zero ``drain_wait`` spans — the
+        0.0 returned by :meth:`drain_overlap_ratio` then means "nothing
+        to overlap", not "overlap failed" (dense path, empty runs)."""
+        return not any(s.name == "drain_wait" for s in self.spans)
+
     def drain_overlap_ratio(self) -> float:
         """Fraction of drain-wait time spent with a successor dispatch
-        already in flight (1.0 = every drain overlapped compute)."""
+        already in flight (1.0 = every drain overlapped compute).
+
+        Defined as 0.0 when there were no drain spans at all; check
+        :meth:`no_drains` (exported as the ``no_drains`` field in
+        :meth:`to_dict` / ``RunReport``) to tell the cases apart."""
         tot = over = 0
         for s in self.spans:
             if s.name != "drain_wait":
@@ -138,6 +190,27 @@ class SpanTracer:
                 "tid": self.tid,
                 "args": s.args,
             })
+        for c in self.counters:
+            events.append({
+                "name": c.name,
+                "cat": "counter",
+                "ph": "C",
+                "ts": (c.ts_ns - self.origin_ns) / 1000.0,
+                "pid": self.pid,
+                "tid": self.tid,
+                "args": c.values,
+            })
+        for ev in self.instants:
+            events.append({
+                "name": ev.name,
+                "cat": ev.cat,
+                "ph": "i",
+                "s": "t",   # thread-scoped marker
+                "ts": (ev.ts_ns - self.origin_ns) / 1000.0,
+                "pid": self.pid,
+                "tid": self.tid,
+                "args": ev.args,
+            })
         events.sort(key=lambda e: e["ts"])
         return {"traceEvents": events, "displayTimeUnit": "ms"}
 
@@ -150,6 +223,9 @@ class SpanTracer:
         return {
             "origin_ns": self.origin_ns,
             "drain_overlap_ratio": self.drain_overlap_ratio(),
+            "no_drains": self.no_drains(),
+            "counter_samples": len(self.counters),
+            "instant_events": len(self.instants),
             "spans": [{
                 "name": s.name, "cat": s.cat,
                 "start_ns": s.start_ns - self.origin_ns,
@@ -172,8 +248,11 @@ class SpanTracer:
             lines.append("%-16s %6d %12.3f %10.3f %6.1f%%"
                          % (name, n, tot / 1e6, tot / 1e6 / n,
                             100.0 * tot / wall))
-        lines.append("drain_overlap_ratio %.3f"
-                     % self.drain_overlap_ratio())
+        if self.no_drains():
+            lines.append("drain_overlap_ratio n/a (no_drains)")
+        else:
+            lines.append("drain_overlap_ratio %.3f"
+                         % self.drain_overlap_ratio())
         return "\n".join(lines)
 
 

@@ -1,0 +1,29 @@
+"""repro.stream — streaming session driver ("C3B fabric as a service").
+
+Turns the fixed M-message batch engine into a resident service: a
+seeded workload generator (:mod:`repro.stream.workload` — constant /
+diurnal / bursty / heavy-tailed arrival processes) schedules an
+unbounded message horizon onto the link fabric, the engine runs it in
+horizon mode (``drain_sink`` — O(W) device state, O(1) host memory per
+superchunk, zero extra dispatches), and :mod:`repro.stream.session`
+aggregates the per-chunk ``MetricsBlock`` feed into live percentiles,
+rates, SLO watchdog events and a periodic ``LiveReport``, calibrated
+against the analytic capacity model in ``core/network.py``.
+
+CLI: ``python -m repro.stream`` (``--selftest`` for the CI smoke).
+"""
+
+from .session import (  # noqa: F401
+    StreamConfig,
+    StreamResult,
+    StreamSession,
+    analytic_capacity,
+    run_stream,
+)
+from .workload import (  # noqa: F401
+    ArrivalProcess,
+    arrivals_per_round,
+    build_stream_spec,
+    dispatch_rounds,
+    stream_window_slots,
+)

@@ -42,7 +42,8 @@ from ..obs.tracer import obs_span
 from .graph import LinkSpec, Topology
 
 __all__ = ["LinkAccessors", "TopologyAccessors", "LinkResult",
-           "TopologyResult", "link_specs", "plan_floors", "run_topology"]
+           "TopologyResult", "link_specs", "plan_floors", "FloorPlanner",
+           "run_topology"]
 
 
 def link_specs(topo: Topology) -> List[SimSpec]:
@@ -130,6 +131,53 @@ def plan_floors(plan: Dict[int, int], n_lanes: int, m: int,
     return floors
 
 
+class FloorPlanner:
+    """Reusable commit-floor callback over a lane -> upstream plan.
+
+    One instance is one session's floor stream: the engine calls it at
+    every chunk boundary with the lanes' retired prefixes and it applies
+    the shared :func:`plan_floors` rule. ``keep_history=True`` (batch
+    topology runs) records every boundary's floors so
+    ``LinkResult.commit_floors`` can be reconstructed; streaming
+    sessions pass ``False`` — only the latest floors are retained and
+    host memory stays O(1) in stream length.
+    """
+
+    def __init__(self, plan: Dict[int, int], n_lanes: int, m: int,
+                 keep_history: bool = True):
+        self.plan = dict(plan)
+        self.n_lanes = int(n_lanes)
+        self.m = int(m)
+        self.keep_history = keep_history
+        self.history: List[np.ndarray] = []
+        self.last: np.ndarray = np.full(n_lanes, m, dtype=np.int64)
+        self.calls = 0
+
+    @classmethod
+    def chain(cls, n_lanes: int, m: int,
+              keep_history: bool = True) -> "FloorPlanner":
+        """Lane i is chained behind lane i-1 (lane 0 unchained)."""
+        return cls({i: i - 1 for i in range(1, n_lanes)}, n_lanes, m,
+                   keep_history=keep_history)
+
+    def seed_history(self, bases_rows) -> None:
+        """Reconstruct pre-resume floors from a checkpoint's base
+        trajectory (same rule — bit-identical to the original run)."""
+        self.history = [plan_floors(self.plan, self.n_lanes, self.m, row)
+                        for row in bases_rows]
+
+    def __call__(self, t: int, bases: np.ndarray) -> np.ndarray:
+        floors = plan_floors(self.plan, self.n_lanes, self.m, bases)
+        self.calls += 1
+        self.last = floors.copy()
+        if self.keep_history:
+            self.history.append(self.last)
+        return floors
+
+    def stacked(self) -> np.ndarray:
+        return np.stack(self.history)
+
+
 def run_topology(topo: Topology, *, recorder=None, resume=None,
                  fail_schedule=None) -> TopologyResult:
     """Execute every link of the graph in one vmapped windowed session.
@@ -145,26 +193,19 @@ def run_topology(topo: Topology, *, recorder=None, resume=None,
     """
     specs = link_specs(topo)
     m = specs[0].m
-    up = _floor_plan(topo)
-    floors_hist: List[np.ndarray] = []
+    planner = FloorPlanner(_floor_plan(topo), len(specs), m)
     if resume is not None:
-        floors_hist = [plan_floors(up, len(specs), m, row)
-                       for row in np.asarray(resume.bases_hist)[:-1]]
-
-    def commit_floors(t: int, bases: np.ndarray) -> np.ndarray:
-        floors = plan_floors(up, len(specs), m, bases)
-        floors_hist.append(floors.copy())
-        return floors
+        planner.seed_history(np.asarray(resume.bases_hist)[:-1])
 
     # the engine wraps each commit_floors call in a "plan_floors" span;
     # this outer span makes whole-graph sessions addressable in the
     # exported timeline (repro.obs.tracer)
     with obs_span("run_topology", cat="engine",
                   links=[l.name for l in topo.links]):
-        results = _run_windowed_batch(specs, commit_floors=commit_floors,
+        results = _run_windowed_batch(specs, commit_floors=planner,
                                       recorder=recorder, resume=resume,
                                       fail_schedule=fail_schedule)
-    hist = np.stack(floors_hist)                  # (n_chunks, L)
+    hist = planner.stacked()                      # (n_chunks, L)
     links = {
         l.name: LinkResult(link=l, result=r, commit_floors=hist[:, i])
         for i, (l, r) in enumerate(zip(topo.links, results))}
