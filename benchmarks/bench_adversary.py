@@ -1,0 +1,153 @@
+"""Byzantine adversary palette benchmarks: attack tax + reconfig cost.
+
+Two sections:
+
+* ``palette`` — per-adversary-kind sweep against the honest baseline at
+  each size: warm wall time, wire amplification (resends / extra cross
+  messages the attack manufactures) and the measured chunk-compile
+  delta. Every adversary mask rides the traced ``FailArrays``, so the
+  honest program must serve the *entire* palette — the headline
+  ``extra_traces`` column is expected to be 0 for every kind.
+* ``reconfig`` — mid-stream membership/quorum edits replayed from a
+  checkpoint: remove-replica, join-replica and stake re-weight
+  injections, warm wall time per replay and the chunk-compile delta
+  after one warm-up (the zero-recompilation contract for
+  reconfiguration, same counter the replay bench gates on).
+
+  PYTHONPATH=src python -m benchmarks.bench_adversary
+      [--sizes 2048,8192] [--json BENCH_adversary.json]
+
+The CI fast tier runs ``--sizes 256`` as an acceptance smoke
+(``tests/test_adversary.py``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.run import _dump_json
+from repro.adversary import ADVERSARY_KINDS, adversary_scenario
+from repro.core import FailureScenario, RSMConfig, SimConfig
+from repro.adversary import join_receiver, remove_receiver
+from repro.core.simulator import (build_spec, chunk_trace_count,
+                                  run_simulation, spec_with_quorum)
+from repro.replay import Injection, record_simulation, replay
+
+SIZES = (2048, 8192)
+CFG = RSMConfig.bft(1)
+SEND_WINDOW = 4
+
+
+def _sim(m: int) -> SimConfig:
+    steps = m // (CFG.n * SEND_WINDOW) + 60
+    return SimConfig(n_msgs=m, steps=steps, window=SEND_WINDOW, phi=32,
+                     window_slots="auto", chunk_steps=32)
+
+
+def _run(spec):
+    t0 = time.time()
+    res = run_simulation(spec)
+    np.asarray(res.deliver_time)
+    return res, time.time() - t0
+
+
+def palette_rows(sizes):
+    rows = []
+    for m in sizes:
+        honest = build_spec(CFG, CFG, _sim(m))
+        _run(honest)                               # cold compile
+        base_traces = chunk_trace_count()
+        hres, hwarm = _run(honest)
+        hcross = int(np.asarray(hres.metrics.cross_msgs).sum())
+        rows.append(dict(section="palette", kind="honest", n_msgs=m,
+                         warm_s=hwarm, resends=0, extra_cross=0,
+                         delivered=m, extra_traces=0))
+        for kind in ADVERSARY_KINDS:
+            sc = adversary_scenario(kind, CFG.n, CFG.n, seed=0)
+            spec = build_spec(CFG, CFG, _sim(m), failures=sc)
+            res, warm = _run(spec)
+            rows.append(dict(
+                section="palette", kind=kind, n_msgs=m, warm_s=warm,
+                resends=int(np.asarray(res.metrics.resends).sum()),
+                extra_cross=int(np.asarray(res.metrics.cross_msgs).sum())
+                            - hcross,
+                delivered=int((np.asarray(res.deliver_time) >= 0).sum()),
+                extra_traces=chunk_trace_count() - base_traces))
+            print(f"palette,{kind},{m},{warm:.3f}s,"
+                  f"resends={rows[-1]['resends']},"
+                  f"extra_traces={rows[-1]['extra_traces']}")
+    return rows
+
+
+def reconfig_rows(sizes):
+    rows = []
+    n = CFG.n
+    for m in sizes:
+        spec = build_spec(CFG, CFG, _sim(m))
+        _, trace = record_simulation(spec)
+        chunk = trace.chunk_steps
+        t_edit = (spec.steps // (2 * chunk)) * chunk
+        variants = {
+            "remove_replica": [remove_receiver(
+                n, n - 1, t_edit, stakes_r=(1.0,) * n,
+                quack_thresh=2.0, dup_thresh=2.0)],
+            "stake_reweight": [Injection(
+                t_edit, stakes_r=(2.0,) + (1.0,) * (n - 1),
+                quack_thresh=3.0)],
+            "adversary_on_off": [
+                Injection(t_edit,
+                          failures=adversary_scenario("selective_drop",
+                                                      n, n, seed=0)),
+                Injection(min(t_edit * 2, spec.steps - chunk)
+                          // chunk * chunk,
+                          failures=FailureScenario())],
+        }
+        # join twin: the base run models the future member as
+        # crashed-from-round-0 with zero stake; the injection flips it
+        # alive and weights it in (same compiled program — crash masks,
+        # stakes and thresholds are all traced)
+        spec_j = build_spec(CFG, CFG, _sim(m), failures=FailureScenario(
+            crash_r=(-1,) * (n - 1) + (0,)))
+        spec_j = spec_with_quorum(spec_j,
+                                  stakes_r=(1.0,) * (n - 1) + (0.0,))
+        _, trace_j = record_simulation(spec_j)
+        replay(trace, t_edit, variants["remove_replica"])  # warm-up
+        base_traces = chunk_trace_count()
+        jobs = [(name, trace, inj) for name, inj in variants.items()]
+        jobs.append(("join_replica", trace_j, [join_receiver(
+            n, n - 1, t_edit, stakes_r=(1.0,) * n,
+            quack_thresh=2.0, dup_thresh=2.0)]))
+        for name, tr, inj in jobs:
+            t0 = time.time()
+            ri = replay(tr, t_edit, inj)[0]
+            np.asarray(ri.deliver_time)
+            rows.append(dict(
+                section="reconfig", kind=name, n_msgs=m,
+                warm_s=time.time() - t0,
+                delivered=int((np.asarray(ri.deliver_time) >= 0).sum()),
+                extra_traces=chunk_trace_count() - base_traces))
+            print(f"reconfig,{name},{m},{rows[-1]['warm_s']:.3f}s,"
+                  f"extra_traces={rows[-1]['extra_traces']}")
+    return rows
+
+
+def main(sizes=None, json_path=None):
+    sizes = tuple(sizes) if sizes else SIZES
+    rows = palette_rows(sizes) + reconfig_rows(sizes)
+    if json_path:
+        _dump_json(json_path, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated n_msgs sizes")
+    ap.add_argument("--json", default="BENCH_adversary.json")
+    a = ap.parse_args()
+    sizes = (tuple(int(s) for s in a.sizes.split(","))
+             if a.sizes else None)
+    main(sizes=sizes, json_path=a.json)

@@ -151,6 +151,21 @@ def replay():
             f"{rec['record_overhead']:.0%}")
 
 
+def adversary():
+    from benchmarks import bench_adversary as m
+    rs = m.main(json_path="BENCH_adversary.json")
+    pal = [r for r in rs if r["section"] == "palette"
+           and r["kind"] != "honest"]
+    big_m = max(r["n_msgs"] for r in pal)
+    extra = sum(r["extra_traces"] for r in rs)
+    worst = max((r for r in pal if r["n_msgs"] == big_m),
+                key=lambda r: r["resends"])
+    rec = [r for r in rs if r["section"] == "reconfig"][-1]
+    return (f"palette{len({r['kind'] for r in pal})}@{big_m},"
+            f"worst={worst['kind']}({worst['resends']}resends),"
+            f"reconfig_warm={rec['warm_s']:.2f}s,extra_traces={extra}")
+
+
 def crosspod():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
@@ -176,6 +191,7 @@ TABLES = (("fig8_scalability", fig8, None),
           ("topology_apps", topology, "BENCH_topology.json"),
           ("replay_whatif", replay, "BENCH_replay.json"),
           ("stream", stream, "BENCH_stream.json"),
+          ("adversary", adversary, "BENCH_adversary.json"),
           ("kernels", kernels, None),
           ("crosspod_collectives", crosspod, None))
 

@@ -1,0 +1,38 @@
+"""Byzantine adversary palette + mid-stream reconfiguration toolkit.
+
+The engine's fault model (:class:`~repro.core.FailureScenario`) carries
+every adversary as *traced* inputs riding the stacked ``FailArrays``, so
+an attack can be switched on, escalated, or healed at any chunk boundary
+— by a ``fail_schedule`` callback, a replay
+:class:`~repro.replay.Injection`, or a streaming
+:class:`~repro.stream.StreamSession` attack schedule — without a single
+recompile. This package is the scenario-construction layer on top:
+
+* :mod:`~repro.adversary.palette` — named constructors for each
+  adversary kind (equivocating senders, stale/replayed QUACK acks,
+  §4.3 highest-quacked liars, selective per-pair drops, greedy
+  stake-weighted quorum attacks) and for the reconfiguration
+  injections (remove/join a replica, re-weight stakes) expressed as
+  crash-mask flips plus ``spec_with_quorum`` swaps.
+* :mod:`~repro.adversary.safety` — the §4.3 retirement-safety budget:
+  which adversary stake totals keep "no undelivered message is ever
+  retired" *provable*, and assertion helpers that check engine and
+  oracle runs against it.
+
+Every palette scenario is mirrored bit-exactly by the numpy oracle
+(``core/refsim.py``) — ``tests/test_adversary.py`` sweeps the palette
+across dense, windowed, superchunk and Pallas engine paths.
+"""
+
+from .palette import (ADVERSARY_KINDS, adversary_scenario, equivocators,
+                      hq_liars, join_receiver, remove_receiver,
+                      selective_drops, stake_attack, stale_ackers,
+                      streaming_attack)
+from .safety import (QuorumBudget, assert_safe_retirement, quorum_budget)
+
+__all__ = [
+    "ADVERSARY_KINDS", "adversary_scenario", "equivocators", "hq_liars",
+    "selective_drops", "stake_attack", "stale_ackers", "streaming_attack",
+    "remove_receiver", "join_receiver",
+    "QuorumBudget", "quorum_budget", "assert_safe_retirement",
+]

@@ -143,7 +143,11 @@ def gc_frontier_device(*, base, t_next, m: int,
     abs_idx = (base + jnp.arange(w, dtype=jnp.int32)).astype(jnp.int32)
     w_known = jnp.einsum("ljm,j->lm", known.astype(jnp.float32),
                          stakes_r.astype(jnp.float32))
-    quacked_everywhere = (w_known >= jnp.float32(quack_thresh)).all(axis=0)
+    # asarray, not jnp.float32(): the threshold may be a traced scalar
+    # (stake re-weighting rides the FailArrays), and np.float32(tracer)
+    # would force concretization
+    thr = jnp.asarray(quack_thresh, dtype=jnp.float32)
+    quacked_everywhere = (w_known >= thr).all(axis=0)
     dispatched = orig_sent
     no_pending_bcast = ~bcast_q.any(axis=0)
     relevant = ((crash_r < 0) | (crash_r > t_next)) & ~byz_ack_low

@@ -80,9 +80,13 @@ def stake_quorum_bitmap(claims: jnp.ndarray, complaints: jnp.ndarray,
             ext = jnp.zeros(claims.shape[:-1] + (pad,), dtype=bool)
             claims = jnp.concatenate([claims, ext], axis=-1)
             complaints = jnp.concatenate([complaints, ext], axis=-1)
+        # thresholds stay jnp values (possibly traced — stake re-weight
+        # swaps feed them through FailArrays): the kernel takes them as
+        # (1, 1) scalar blocks, so a traced threshold costs no recompile
         quacked, lost, prefix = quack_scan(
-            claims, complaints, stakes, float(quack_thresh),
-            float(dup_thresh), block_w=BLOCK_W,
+            claims, complaints, stakes,
+            jnp.asarray(quack_thresh, dtype=jnp.float32),
+            jnp.asarray(dup_thresh, dtype=jnp.float32), block_w=BLOCK_W,
             interpret=default_interpret(), compute_lost=need_lost)
         return (quacked[..., :w],
                 None if lost is None else lost[..., :w],

@@ -58,9 +58,14 @@ class RefResult:
     recv_has: np.ndarray      # (n_r, M)
     cross_msgs: np.ndarray    # (T,)
     intra_msgs: np.ndarray    # (T,)
-    resends: np.ndarray       # (T,)
+    resends: np.ndarray      # (T,)
     gc_frontiers: Optional[np.ndarray] = None   # (n_chunks,) window base
     retired_quack_margin: Optional[float] = None
+    # number of window slots the GC frontier retired while undelivered —
+    # 0 whenever the adversary stake budget is within the §4.3 bound
+    # (``simulator.retire_safety_stakes_ok``); the oracle counts it so
+    # the safety property can be asserted independently of the engine
+    retired_undelivered: Optional[int] = None
     # dispatch round of each original send (-1 = never dispatched) and
     # per-message retire-step - send-step (-1 = not delivered) — the
     # oracle for ``SimResult.send_step`` / ``SimResult.delivery_latency``
@@ -116,8 +121,7 @@ class _RefMachine:
         self.spec = spec
         self.n_s, self.n_r, self.m = spec.n_s, spec.n_r, spec.m
         self.phi = spec.phi
-        self.st_s = np.asarray(spec.stakes_s)
-        self.st_r = np.asarray(spec.stakes_r)
+        self.set_quorum(spec)
         self.orig_sender = np.asarray(spec.orig_sender)
         self.orig_recv = np.asarray(spec.orig_recv)
         self.orig_step = np.asarray(spec.orig_step)
@@ -147,6 +151,24 @@ class _RefMachine:
         # (k, quack col, deliver, retry col, recv col) at retirement time
         self.retired_snaps: list = []
         self.retired_margin = np.inf
+        self.retired_undelivered = 0
+
+    def set_quorum(self, spec: SimSpec) -> None:
+        """Swap stakes / quorum thresholds in force from the next step on.
+
+        The oracle twin of the engine's stake re-weighting: stakes and
+        thresholds ride the traced ``FailArrays``
+        (``simulator.spec_with_quorum``), so a mid-stream swap at a chunk
+        boundary costs the engine zero recompiles — and costs the oracle
+        one attribute update. The retransmit rotations (``rs_seq`` /
+        ``rr_seq``) are committed at build and intentionally not swapped,
+        matching the engine.
+        """
+        self.st_s = np.asarray(spec.stakes_s, dtype=np.float64)
+        self.st_r = np.asarray(spec.stakes_r, dtype=np.float64)
+        self.quack_thresh = float(spec.quack_thresh)
+        self.dup_thresh = float(spec.dup_thresh)
+        self.hq_thresh = float(spec.hq_thresh)
 
     def set_failures(self, failures) -> None:
         """Swap the failure masks in force from the next ``step`` on.
@@ -170,25 +192,36 @@ class _RefMachine:
         self.byz_ack_low = tup(failures.byz_ack_low, n_r, False)
         self.byz_bcast_partial = tup(failures.byz_bcast_partial, n_r, False)
         self.bcast_limit = int(failures.bcast_limit)
+        self.byz_equiv_send = tup(failures.byz_equiv_send, n_s, False)
+        self.byz_hq_advance = tup(failures.byz_hq_advance, n_s, 0)
+        self.byz_ack_stale = tup(failures.byz_ack_stale, n_r, False)
+        dp = failures.drop_pair
+        self.drop_pair = (np.zeros((n_s, n_r), dtype=bool) if dp is None
+                          else np.asarray([list(r) for r in dp], dtype=bool))
         self.honest_r = ((self.crash_r < 0)
                          & ~(self.byz_recv_drop | self.byz_ack_low
                              | (self.byz_ack_advance > 0)
-                             | self.byz_bcast_partial))
+                             | self.byz_bcast_partial
+                             | self.byz_ack_stale))
 
     def quacked_at(self, l: int) -> np.ndarray:
         w = (self.known[l].astype(np.float64)
              * self.st_r[:, None]).sum(axis=0)
-        return w >= self.spec.quack_thresh
+        return w >= self.quack_thresh
 
     def delivered_prefix(self) -> int:
         return _cum(self.deliver_time >= 0)
 
     def step(self, t: int, commit_floor: Optional[int] = None) -> None:
-        spec = self.spec
         n_s, n_r, m, phi = self.n_s, self.n_r, self.m, self.phi
         floor = m if commit_floor is None else int(commit_floor)
         alive_s = (self.crash_s < 0) | (t < self.crash_s)
         alive_r = (self.crash_r < 0) | (t < self.crash_r)
+        # stale-ack replay reads the complaint list as it stood at the
+        # start of the round — before step (2) clears declared cycles —
+        # exactly like the vectorized step reads ``state.complaint``
+        stale_any = bool(self.byz_ack_stale.any())
+        complaint_prev = self.complaint.copy() if stale_any else None
 
         # (1) broadcasts land
         intra = 0
@@ -212,13 +245,19 @@ class _RefMachine:
 
         # (2) retransmissions (from knowledge as of t-1; only messages
         # whose original dispatch already happened — the sent bit, not the
-        # schedule round, under commit-gated dispatch)
-        resends = []  # (sender, msg, target)
+        # schedule round, under commit-gated dispatch). Each wire entry
+        # carries a ``lands`` flag: an equivocating sender's resend is
+        # detected and discarded wholesale by the receiver, and a
+        # drop_pair edge kills the copy in the network — either way the
+        # wire copy happened (it counts in the metrics, the retry counter
+        # and the election rotation advance) but nothing is stored, acked
+        # or heard as §4.3 metadata.
+        resends = []  # (sender, msg, target, lands)
         for l in range(n_s):
             qk = self.quacked_at(l)
             for k in range(m):
                 w = float((self.repeat_c[l, :, k] * self.st_r).sum())
-                if (w >= spec.dup_thresh and not qk[k]
+                if (w >= self.dup_thresh and not qk[k]
                         and self.orig_sent[k]):
                     self.retry[l, k] += 1
                     self.complaint[l, :, k] = False
@@ -226,15 +265,17 @@ class _RefMachine:
                     if self.rs_seq[(k + self.retry[l, k])
                                    % len(self.rs_seq)] == l:
                         if alive_s[l] and not self.byz_send_drop[l]:
-                            tgt = self.rr_seq[(self.orig_recv[k]
-                                               + self.retry[l, k])
-                                              % len(self.rr_seq)]
-                            resends.append((l, k, int(tgt)))
+                            tgt = int(self.rr_seq[(self.orig_recv[k]
+                                                   + self.retry[l, k])
+                                                  % len(self.rr_seq)])
+                            lands = (not self.byz_equiv_send[l]
+                                     and not self.drop_pair[l, tgt])
+                            resends.append((l, k, tgt, lands))
 
         # (3) original sends + landing: a message is due once its schedule
         # round has passed AND its entry is committed on the source RSM;
         # the dispatch attempt happens exactly once, alive or not.
-        wire = []  # (sender, msg, target)
+        wire = []  # (sender, msg, target, lands)
         for k in range(m):
             if (self.orig_sent[k] or self.orig_step[k] > t or k >= floor):
                 continue
@@ -242,14 +283,20 @@ class _RefMachine:
             self.send_time[k] = t
             l = self.orig_sender[k]
             if alive_s[l] and not self.byz_send_drop[l]:
-                wire.append((int(l), k, int(self.orig_recv[k])))
+                i = int(self.orig_recv[k])
+                wire.append((int(l), k, i, not self.drop_pair[l, i]))
         wire.extend(resends)
         qp_prev = np.array([int(np.cumprod(self.quacked_at(l)).sum())
                             for l in range(n_s)])
-        for (l, k, i) in wire:
-            if alive_r[i]:
-                self.hq_reports[i, l] = max(self.hq_reports[i, l],
-                                            qp_prev[l])
+        for (l, k, i, lands) in wire:
+            if alive_r[i] and lands:
+                # §4.3 metadata piggyback; an hq-lying sender inflates
+                # its claimed prefix per receiver (min(true+adv+i, m)) so
+                # no two receivers can cross-check the same number
+                adv = int(self.byz_hq_advance[l])
+                hq = (int(qp_prev[l]) if adv == 0
+                      else min(int(qp_prev[l]) + adv + i, m))
+                self.hq_reports[i, l] = max(self.hq_reports[i, l], hq)
                 if not self.byz_recv_drop[i]:
                     if not self.recv_has[i, k]:
                         self.recv_has[i, k] = True
@@ -267,7 +314,7 @@ class _RefMachine:
             self.ack_floor[j] = max(
                 self.ack_floor[j],
                 _quorum_prefix(self.hq_reports[j], self.st_s,
-                               spec.hq_thresh))
+                               self.hq_thresh))
             eff = self.recv_has[j].copy()
             eff[:self.ack_floor[j]] = True
             cum, claim, missing = _claim_and_missing(eff, phi)
@@ -278,11 +325,24 @@ class _RefMachine:
                 claim = np.arange(m) < cum
                 missing = []
             l = (j + t) % n_s
+            # stale replay (applied LAST, freezing whatever the other
+            # lie masks produced): resend the previous ack to this
+            # round's target verbatim — its last cum counter, the prefix
+            # claim below it, and its previous complaint list. Truthful
+            # but old: monotone claims cannot fabricate receipt, but the
+            # frozen cum trips the duplicate-cum complaint below.
+            stale = bool(self.byz_ack_stale[j])
+            if stale:
+                cum = max(int(self.last_cum[l, j]), 0)
+                claim = np.arange(m) < cum
             self.known[l, j] |= claim
             newc = np.zeros(m, dtype=bool)
-            for k in missing:
-                if k < m:
-                    newc[k] = True
+            if stale:
+                newc[:] = complaint_prev[l, j]
+            else:
+                for k in missing:
+                    if k < m:
+                        newc[k] = True
             if self.last_cum[l, j] == cum and cum < m:
                 newc[cum] = True
             self.repeat_c[l, j] |= self.complaint[l, j] & newc
@@ -306,13 +366,21 @@ class _RefMachine:
             base=base, t_next=t_next, m=self.m,
             known=self.known[:, :, lo:hi], bcast_q=self.bcast_q[:, lo:hi],
             recv_has=self.recv_has[:, lo:hi], ack_floor=self.ack_floor,
-            stakes_r=self.st_r, quack_thresh=self.spec.quack_thresh,
+            stakes_r=self.st_r, quack_thresh=self.quack_thresh,
             orig_sent=self.orig_sent[lo:hi], crash_r=self.crash_r,
             byz_ack_low=self.byz_ack_low)
 
     def retire(self, base: int, f: int) -> None:
         """Snapshot slots ``[base, base+f)`` at retirement time."""
         for k in range(base, base + f):
+            # §4.3 safety: a retired slot must be physically held by at
+            # least one replica of the receiver RSM — recv_has is ground
+            # truth receipt, so a quorum of fabricated claims (the only
+            # way to quack an unreceived message) is caught here even
+            # when every truthful holder sits outside honest_r
+            # (bcast-partial or later-crashing replicas).
+            if not self.recv_has[:, k].any():
+                self.retired_undelivered += 1
             # float32 like the device QUACK einsum (see gc_frontier)
             w_k = (self.known[:, :, k].astype(np.float32)
                    * self.st_r[None, :].astype(np.float32)).sum(axis=1)
@@ -346,6 +414,8 @@ class _RefMachine:
             gc_frontiers=frontiers,
             retired_quack_margin=(self.retired_margin if windowed
                                   else None),
+            retired_undelivered=(self.retired_undelivered if windowed
+                                 else None),
             send_step=self.send_time.copy(),
             delivery_latency=np.where(
                 self.deliver_time >= 0,
@@ -353,11 +423,14 @@ class _RefMachine:
 
 
 def run_reference(spec: SimSpec, fail_schedule=None) -> RefResult:
-    """Oracle run; ``fail_schedule(t) -> Optional[FailureScenario]`` is
-    consulted at chunk starts and swaps the failure masks in force from
-    round ``t`` on — the numpy twin of the engine's mid-stream
-    ``FailArrays`` swap, so replayed-with-injection runs can be checked
-    against a from-scratch oracle executing the merged schedule."""
+    """Oracle run; ``fail_schedule(t)`` is consulted at chunk starts and
+    swaps the failure state in force from round ``t`` on — the numpy twin
+    of the engine's mid-stream ``FailArrays`` swap, so replayed-with-
+    injection runs can be checked against a from-scratch oracle executing
+    the merged schedule. Each entry may be a ``FailureScenario`` (mask
+    swap only) or a full ``SimSpec`` (mask swap *plus* stake/threshold
+    re-weighting — the reconfiguration primitive, mirroring the engine's
+    ``fail_schedule`` returning ``spec_with_quorum`` specs)."""
     mac = _RefMachine(spec)
 
     # --- sliding-window mirror (windowed specs only) ----------------------
@@ -373,7 +446,11 @@ def run_reference(spec: SimSpec, fail_schedule=None) -> RefResult:
         if fail_schedule is not None and t % chunk == 0:
             new_fails = fail_schedule(t)
             if new_fails is not None:
-                mac.set_failures(new_fails)
+                if isinstance(new_fails, SimSpec):
+                    mac.set_quorum(new_fails)
+                    mac.set_failures(spec_failures(new_fails))
+                else:
+                    mac.set_failures(new_fails)
         # window mirror: adaptive overflow policy at chunk starts,
         # exactly where the jax windowed path checks before a chunk.
         if win and t % chunk == 0:

@@ -89,7 +89,8 @@ from .types import (FailureScenario, RSMConfig, SimConfig,
 __all__ = ["SimSpec", "SimResult", "FailArrays", "build_spec",
            "run_simulation", "run_simulation_batch",
            "require_uniform_batch", "ChunkCheckpoint", "WindowGrowthEvent",
-           "spec_failures", "spec_with_failures", "chunk_trace_count",
+           "spec_failures", "spec_with_failures", "spec_with_quorum",
+           "retire_safety_stakes_ok", "chunk_trace_count",
            "chunk_dispatch_count", "host_sync_count"]
 
 # plain Python ints, not jnp scalars: a module-level jnp call would
@@ -126,6 +127,13 @@ class SimSpec:
     byz_ack_low: Tuple[bool, ...]
     byz_bcast_partial: Tuple[bool, ...]
     bcast_limit: int
+    # Byzantine adversary palette (repro.adversary). Optional with None
+    # defaults so specs recorded by older traces deserialize unchanged;
+    # None is equivalent to the neutral mask everywhere.
+    byz_equiv_send: Optional[Tuple[bool, ...]] = None    # (n_s,)
+    byz_hq_advance: Optional[Tuple[int, ...]] = None     # (n_s,)
+    byz_ack_stale: Optional[Tuple[bool, ...]] = None     # (n_r,)
+    drop_pair: Optional[Tuple[Tuple[bool, ...], ...]] = None  # (n_s, n_r)
     window_slots: int = 0             # 0 => dense (full-M) state
     chunk_steps: int = 0              # rounds per compiled chunk (windowed)
     adaptive_window: bool = True      # grow W / dense-fallback on overflow
@@ -169,6 +177,19 @@ class FailArrays(NamedTuple):
     byz_bcast_partial: jnp.ndarray  # (n_r,) bool
     bcast_limit: jnp.ndarray       # () int32
     commit_floor: jnp.ndarray      # () int32 — dispatch gate (abs seqno)
+    # adversary palette (repro.adversary)
+    byz_equiv_send: jnp.ndarray    # (n_s,) bool — resends equivocate
+    byz_hq_advance: jnp.ndarray    # (n_s,) int32 — §4.3 hq-piggyback lie
+    byz_ack_stale: jnp.ndarray     # (n_r,) bool — replays previous ack
+    drop_pair: jnp.ndarray         # (n_s, n_r) bool — selective drops
+    # quorum weights/thresholds are traced too, so a mid-stream stake
+    # re-weight / membership change (replay Injection) swaps them with
+    # zero recompilation — the compiled programs never close over them
+    stakes_s: jnp.ndarray          # (n_s,) float32
+    stakes_r: jnp.ndarray          # (n_r,) float32
+    quack_thresh: jnp.ndarray      # () float32 — u_r + 1 (stake units)
+    dup_thresh: jnp.ndarray        # () float32 — r_r + 1
+    hq_thresh: jnp.ndarray         # () float32 — r_s + 1
 
 
 class SimState(NamedTuple):
@@ -406,7 +427,7 @@ def build_spec(sender: RSMConfig, receiver: RSMConfig,
         orig_step=tuple(int(x) for x in orig_step),
         rs_seq=tuple(int(x) for x in rs_seq),
         rr_seq=tuple(int(x) for x in rr_seq),
-        **_failure_fields(failures, n_s, n_r),
+        **_failure_fields(failures, n_s, n_r, sim.steps),
         window_slots=w_slots,
         chunk_steps=sim.chunk_steps if w_slots else 0,
         adaptive_window=sim.adaptive_window,
@@ -417,14 +438,28 @@ def build_spec(sender: RSMConfig, receiver: RSMConfig,
     )
 
 
-def _failure_fields(failures: FailureScenario, n_s: int, n_r: int) -> dict:
-    """Resolve a FailureScenario into the SimSpec mask fields."""
+def _failure_fields(failures: FailureScenario, n_s: int, n_r: int,
+                    steps: Optional[int] = None) -> dict:
+    """Resolve a FailureScenario into the SimSpec mask fields.
+
+    Validates shapes and ranges up front (clear ``ValueError`` naming
+    the field) instead of letting a wrong-length mask fail deep inside
+    tracing or a beyond-horizon crash step silently never fire.
+    """
 
     def tup(x, n, default):
         if x is None:
             return tuple([default] * n)
         return tuple(x)
 
+    if failures is None:
+        failures = FailureScenario()
+    failures.validate(n_s, n_r, steps)
+    if failures.drop_pair is None:
+        dp = ((False,) * n_r,) * n_s
+    else:
+        dp = tuple(tuple(bool(x) for x in row)
+                   for row in failures.drop_pair)
     return dict(
         crash_s=tup(failures.crash_s, n_s, -1),
         crash_r=tup(failures.crash_r, n_r, -1),
@@ -434,6 +469,10 @@ def _failure_fields(failures: FailureScenario, n_s: int, n_r: int) -> dict:
         byz_ack_low=tup(failures.byz_ack_low, n_r, False),
         byz_bcast_partial=tup(failures.byz_bcast_partial, n_r, False),
         bcast_limit=failures.bcast_limit,
+        byz_equiv_send=tup(failures.byz_equiv_send, n_s, False),
+        byz_hq_advance=tup(failures.byz_hq_advance, n_s, 0),
+        byz_ack_stale=tup(failures.byz_ack_stale, n_r, False),
+        drop_pair=dp,
     )
 
 
@@ -446,7 +485,7 @@ def spec_with_failures(spec: SimSpec, failures: FailureScenario) -> SimSpec:
     edit as a full per-lane spec for the stacked ``FailArrays`` rebuild.
     """
     return dataclasses.replace(
-        spec, **_failure_fields(failures, spec.n_s, spec.n_r))
+        spec, **_failure_fields(failures, spec.n_s, spec.n_r, spec.steps))
 
 
 def spec_failures(spec: SimSpec) -> FailureScenario:
@@ -458,10 +497,52 @@ def spec_failures(spec: SimSpec) -> FailureScenario:
         byz_ack_advance=spec.byz_ack_advance,
         byz_ack_low=spec.byz_ack_low,
         byz_bcast_partial=spec.byz_bcast_partial,
-        bcast_limit=spec.bcast_limit)
+        bcast_limit=spec.bcast_limit,
+        byz_equiv_send=spec.byz_equiv_send,
+        byz_hq_advance=spec.byz_hq_advance,
+        byz_ack_stale=spec.byz_ack_stale,
+        drop_pair=spec.drop_pair)
+
+
+def spec_with_quorum(spec: SimSpec, stakes_s=None, stakes_r=None,
+                     quack_thresh=None, dup_thresh=None,
+                     hq_thresh=None) -> SimSpec:
+    """Re-weight stakes / quorum thresholds on an existing spec.
+
+    The mid-stream reconfiguration primitive: stakes and thresholds are
+    *traced* inputs (they ride ``FailArrays``), so the returned spec
+    shares the original's compiled programs — a ``fail_schedule`` /
+    replay ``Injection`` swap costs zero recompilation. The retransmit
+    rotation schedules (``rs_seq``/``rr_seq``) are committed at spec
+    build and intentionally kept — re-deriving them would change the
+    compiled constants.
+    """
+    def pick(new, old, n=None):
+        if new is None:
+            return old
+        new = tuple(float(x) for x in new) if n is not None else float(new)
+        if n is not None and len(new) != n:
+            raise ValueError(f"stake vector has length {len(new)}, "
+                             f"expected {n}")
+        return new
+
+    return dataclasses.replace(
+        spec,
+        stakes_s=pick(stakes_s, spec.stakes_s, spec.n_s),
+        stakes_r=pick(stakes_r, spec.stakes_r, spec.n_r),
+        quack_thresh=pick(quack_thresh, spec.quack_thresh),
+        dup_thresh=pick(dup_thresh, spec.dup_thresh),
+        hq_thresh=pick(hq_thresh, spec.hq_thresh))
 
 
 def _fail_arrays(spec: SimSpec) -> FailArrays:
+    n_s, n_r = spec.n_s, spec.n_r
+
+    def tup(x, n, default):
+        return [default] * n if x is None else x
+
+    dp = (spec.drop_pair if spec.drop_pair is not None
+          else np.zeros((n_s, n_r), dtype=bool))
     return FailArrays(
         crash_s=jnp.asarray(spec.crash_s, dtype=jnp.int32),
         crash_r=jnp.asarray(spec.crash_r, dtype=jnp.int32),
@@ -472,6 +553,18 @@ def _fail_arrays(spec: SimSpec) -> FailArrays:
         byz_bcast_partial=jnp.asarray(spec.byz_bcast_partial, dtype=bool),
         bcast_limit=jnp.int32(max(spec.bcast_limit, 0)),
         commit_floor=jnp.int32(spec.m),
+        byz_equiv_send=jnp.asarray(
+            tup(spec.byz_equiv_send, n_s, False), dtype=bool),
+        byz_hq_advance=jnp.asarray(
+            tup(spec.byz_hq_advance, n_s, 0), dtype=jnp.int32),
+        byz_ack_stale=jnp.asarray(
+            tup(spec.byz_ack_stale, n_r, False), dtype=bool),
+        drop_pair=jnp.asarray(dp, dtype=bool).reshape(n_s, n_r),
+        stakes_s=jnp.asarray(spec.stakes_s, dtype=jnp.float32),
+        stakes_r=jnp.asarray(spec.stakes_r, dtype=jnp.float32),
+        quack_thresh=jnp.float32(spec.quack_thresh),
+        dup_thresh=jnp.float32(spec.dup_thresh),
+        hq_thresh=jnp.float32(spec.hq_thresh),
     )
 
 
@@ -482,6 +575,11 @@ def _neutral(spec: SimSpec) -> SimSpec:
     — they never change a compiled program. ``use_pallas_quack`` IS part
     of the program (it selects the quorum kernel), so it survives — and
     so does ``collect_metrics`` (it adds the metrics carry to the scan).
+    Stakes and quorum thresholds are traced inputs (``FailArrays``), so
+    they normalize away too — one compiled program serves every stake
+    re-weighting, which is what makes mid-stream reconfiguration free.
+    (The stake-derived rotation schedules ``rs_seq``/``rr_seq`` remain
+    compiled constants and survive.)
     """
     n_s, n_r = spec.n_s, spec.n_r
     return dataclasses.replace(
@@ -490,6 +588,11 @@ def _neutral(spec: SimSpec) -> SimSpec:
         byz_send_drop=(False,) * n_s, byz_recv_drop=(False,) * n_r,
         byz_ack_advance=(0,) * n_r, byz_ack_low=(False,) * n_r,
         byz_bcast_partial=(False,) * n_r, bcast_limit=0,
+        byz_equiv_send=(False,) * n_s, byz_hq_advance=(0,) * n_s,
+        byz_ack_stale=(False,) * n_r,
+        drop_pair=((False,) * n_r,) * n_s,
+        stakes_s=(1.0,) * n_s, stakes_r=(1.0,) * n_r,
+        quack_thresh=1.0, dup_thresh=1.0, hq_thresh=1.0,
         window_slots=0, chunk_steps=0, adaptive_window=True,
         superchunk=1, debug_checks=False)
 
@@ -505,8 +608,10 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
     phi = spec.phi
     orig_sender, orig_recv, orig_step = sched_w
 
-    stakes_s = jnp.asarray(spec.stakes_s, dtype=jnp.float32)
-    stakes_r = jnp.asarray(spec.stakes_r, dtype=jnp.float32)
+    # stakes and quorum thresholds ride the traced FailArrays — the
+    # compiled program serves every stake re-weighting / membership swap
+    stakes_s = fail.stakes_s
+    stakes_r = fail.stakes_r
     rs_seq = jnp.asarray(spec.rs_seq, dtype=jnp.int32)
     rr_seq = jnp.asarray(spec.rr_seq, dtype=jnp.int32)
     ls, lr = len(spec.rs_seq), len(spec.rr_seq)
@@ -516,8 +621,11 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
     idx_s = jnp.arange(n_s, dtype=jnp.int32)
     honest_r = (fail.crash_r < 0) & ~(fail.byz_recv_drop | fail.byz_ack_low
                                       | (fail.byz_ack_advance > 0)
-                                      | fail.byz_bcast_partial)
-    honest_s = (fail.crash_s < 0) & ~fail.byz_send_drop
+                                      | fail.byz_bcast_partial
+                                      | fail.byz_ack_stale)
+    honest_s = (fail.crash_s < 0) & ~(fail.byz_send_drop
+                                      | fail.byz_equiv_send
+                                      | (fail.byz_hq_advance > 0))
 
     # broadcast reach matrix (n_r, n_r): who hears j's intra-RSM broadcast.
     partial_reach = idx_r[None, :] < fail.bcast_limit
@@ -537,8 +645,8 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
 
         # (2) retransmission declaration + election (knowledge of t-1) -----
         quacked_msg_prev, lost_prev, qprefix_prev = stake_quorum_bitmap(
-            state.known, state.repeat_c, stakes_r, spec.quack_thresh,
-            spec.dup_thresh, use_pallas=spec.use_pallas_quack)
+            state.known, state.repeat_c, stakes_r, fail.quack_thresh,
+            fail.dup_thresh, use_pallas=spec.use_pallas_quack)
         # losses can only be declared for messages whose original dispatch
         # already happened; under commit gating the dispatch bit (not the
         # schedule round) is what proves that.
@@ -554,6 +662,16 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
         complaint = jnp.where(declared[:, None, :], False, state.complaint)
         repeat_c = jnp.where(declared[:, None, :], False, state.repeat_c)
         re_target = rr_seq[(orig_recv[None, :] + retry_new) % lr]  # (n_s, W)
+        # adversary: an equivocating sender's retransmissions carry a
+        # payload conflicting with the original — receivers detect the
+        # mismatch and discard them wholesale (no store, no ack claim,
+        # no hq metadata heard); the wire copy still happened (metrics
+        # count `resend` itself) and the retry counter/rotation advance,
+        # so the election keeps rotating toward an honest retransmitter.
+        # Selective per-pair drops kill the copy in the network instead:
+        # same observable non-delivery, but scoped to (sender, receiver).
+        drop_re = jnp.take_along_axis(fail.drop_pair, re_target, axis=1)
+        resend_land = resend & ~fail.byz_equiv_send[:, None] & ~drop_re
 
         # (3) original sends + landing --------------------------------------
         # a message is due once its schedule round has passed AND its
@@ -566,8 +684,12 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
         orig_ok = (due & alive_s[orig_sender]
                    & ~fail.byz_send_drop[orig_sender])
         orig_sent = state.orig_sent | due
-        s_orig = orig_ok[None, :] & (orig_recv[None, :] == idx_r[:, None])
-        s_re = (jnp.einsum("lm,lim->im", resend.astype(jnp.int32),
+        # selective drop of the original copy: the (orig sender, orig
+        # receiver) pair is dropped in the network after being sent
+        drop_o = fail.drop_pair[orig_sender, orig_recv]          # (W,)
+        orig_land = orig_ok & ~drop_o
+        s_orig = orig_land[None, :] & (orig_recv[None, :] == idx_r[:, None])
+        s_re = (jnp.einsum("lm,lim->im", resend_land.astype(jnp.int32),
                            (re_target[:, None, :] == idx_r[None, :, None])
                            .astype(jnp.int32)) > 0)
         wire = s_orig | s_re                                   # (n_r, W)
@@ -585,20 +707,32 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
         # absolute prefix is base + the in-window prefix.
         qp_prev = base + qprefix_prev
         e_lk = ((orig_sender[None, :] == idx_s[:, None])
-                & orig_ok[None, :])                            # (n_s, W)
+                & orig_land[None, :])                          # (n_s, W)
         sent_orig_to = jnp.einsum("lk,ik->li", e_lk.astype(jnp.int32),
                                   s_orig.astype(jnp.int32)) > 0
         sent_re_to = jnp.einsum(
-            "lm,lim->li", resend.astype(jnp.int32),
+            "lm,lim->li", resend_land.astype(jnp.int32),
             (re_target[:, None, :] == idx_r[None, :, None]).astype(jnp.int32)
         ) > 0
         heard = (sent_orig_to | sent_re_to).T                  # (n_r, n_s)
-        hq_new = jnp.where(heard & alive_r[:, None], qp_prev[None, :], 0)
+        # adversary: an hq-lying sender inflates its piggybacked prefix
+        # per receiver — receiver i hears min(true + adv + i, m), so no
+        # two receivers can cross-check the same claim (equivocation on
+        # the §4.3 metadata). The r_s+1 attestation quorum is the
+        # defence: a floor only forms where >= r_s+1 stake agrees, and
+        # at most r_s of it can be lying.
+        hq_lie = fail.byz_hq_advance                            # (n_s,)
+        hq_claim = jnp.where(
+            hq_lie[None, :] > 0,
+            jnp.minimum(qp_prev[None, :] + hq_lie[None, :]
+                        + idx_r[:, None], m),
+            qp_prev[None, :])                                   # (n_r, n_s)
+        hq_new = jnp.where(heard & alive_r[:, None], hq_claim, 0)
         hq_reports = jnp.maximum(state.hq_reports, hq_new.astype(jnp.int32))
 
         # (4) acknowledgements ---------------------------------------------
         ack_floor = weighted_quorum_prefix(hq_reports, stakes_s,
-                                           spec.hq_thresh)
+                                           fail.hq_thresh)
         ack_floor = jnp.maximum(state.ack_floor, ack_floor)
         eff = recv_has | (abs_idx[None, :] < ack_floor[:, None])
         cum, claim, _known_mask = claim_bitmask(eff, phi, base, m)
@@ -613,10 +747,30 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
         miss = jnp.where(fail.byz_ack_low[:, None],
                          abs_idx[None, :] < phi, miss)
         miss = jnp.where((fail.byz_ack_advance > 0)[:, None], False, miss)
-        # implicit duplicate-cum complaint: cum unchanged since last ack to
-        # the same sender => complain about index cum (if it exists).
+        # the ack rotation: receiver j acks sender (j + t) mod n_s, so
+        # `upd` marks exactly the (sender, receiver) pairs whose ack
+        # state refreshes this round
         tgt = (idx_r + t) % n_s                                  # (n_r,)
         upd = (tgt[None, :] == idx_s[:, None]) & alive_r[None, :]  # (n_s,n_r)
+        # adversary: a stale-acking receiver replays its *previous* ack
+        # to this round's target verbatim — the cum counter, prefix
+        # claim and complaint list it last sent that sender (zero/empty
+        # before the first ack). A replayed QUACK is truthful-but-old:
+        # monotone claims can never fabricate receipt, but the frozen
+        # cum counter trips the duplicate-cum complaint at the sender,
+        # manufacturing loss suspicion and resend load (applied LAST so
+        # a stale lie freezes whatever lie the other masks produced).
+        stale = fail.byz_ack_stale                               # (n_r,)
+        prev_cum = jnp.maximum(
+            jnp.where(upd, state.last_cum, 0).sum(axis=0), 0)    # (n_r,)
+        prev_miss = jnp.where(upd[:, :, None], state.complaint,
+                              False).any(axis=0)                 # (n_r, W)
+        cum = jnp.where(stale, prev_cum, cum)
+        claim = jnp.where(stale[:, None],
+                          abs_idx[None, :] < prev_cum[:, None], claim)
+        miss = jnp.where(stale[:, None], prev_miss, miss)
+        # implicit duplicate-cum complaint: cum unchanged since last ack to
+        # the same sender => complain about index cum (if it exists).
         dup_cum = (state.last_cum == cum[None, :])               # (n_s, n_r)
         dup_complaint = (dup_cum[:, :, None]
                          & (abs_idx[None, None, :] == cum[None, :, None])
@@ -632,8 +786,8 @@ def _protocol_step(spec: SimSpec, fail: FailArrays, sched_w, base, w: int):
         # the lost bitmap is unused here (loss declaration works on t-1
         # knowledge, step 2), so the loss quorum is dropped at the call
         quacked_msg, _, qprefix = stake_quorum_bitmap(
-            known, repeat_c, stakes_r, spec.quack_thresh,
-            spec.dup_thresh, use_pallas=spec.use_pallas_quack,
+            known, repeat_c, stakes_r, fail.quack_thresh,
+            fail.dup_thresh, use_pallas=spec.use_pallas_quack,
             need_lost=False)
         quack_time = jnp.where((state.quack_time < 0) & quacked_msg,
                                t, state.quack_time)
@@ -831,7 +985,6 @@ def _build_chunk(nspec: SimSpec, w_slots: int, chunk_len: int, rotate: bool):
         dtype=jnp.int32)
     osend_p, orecv_p = pad(osend, 0), pad(orecv, 0)
     ostep_p = pad(np.minimum(ostep, _NEVER_STEP), _NEVER_STEP)
-    stakes_r32 = jnp.asarray(nspec.stakes_r, dtype=jnp.float32)
     collect = nspec.collect_metrics
 
     def chunk(fail: FailArrays, carry, t0):
@@ -862,7 +1015,7 @@ def _build_chunk(nspec: SimSpec, w_slots: int, chunk_len: int, rotate: bool):
             base=base0, t_next=t0 + chunk_len, m=nspec.m,
             known=state.known, bcast_q=state.bcast_q,
             recv_has=state.recv_has, ack_floor=state.ack_floor,
-            stakes_r=stakes_r32, quack_thresh=nspec.quack_thresh,
+            stakes_r=fail.stakes_r, quack_thresh=fail.quack_thresh,
             orig_sent=state.orig_sent, crash_r=fail.crash_r,
             byz_ack_low=fail.byz_ack_low)
         queue = ChunkQueue(state.quack_time, state.deliver_time,
@@ -1109,6 +1262,36 @@ def run_simulation(spec: SimSpec) -> SimResult:
         delivery_latency=_latency_from(ss, final.deliver_time),
         obs=obs_from_carry(mc) if mc is not None else None,
     )
+
+
+def retire_safety_stakes_ok(spec: SimSpec) -> bool:
+    """Whether the GC retire-implies-delivered invariant is provable.
+
+    A retired slot is QUACKed at every sender, and a QUACK quorum
+    (``quack_thresh`` = u_r+1 stake) intersects at least one *honest*
+    receiver's truthful claim — unless receivers that can fabricate
+    claims (``byz_ack_advance``) control a whole quorum by themselves,
+    or senders lying in the §4.3 hq piggyback (``byz_hq_advance``)
+    control a whole attestation quorum (``hq_thresh`` = r_s+1) and can
+    raise ack floors past undelivered messages. Within those stake
+    budgets the invariant is exact (the engine's debug retire check and
+    ``repro.adversary.safety`` assert it); beyond them the protocol's
+    own assumptions are violated and retirement may outrun delivery.
+    Every other adversary kind (drops, equivocation, stale replays,
+    low acks, partial broadcasts) only ever *suppresses* claims, so it
+    can never make the invariant unsound.
+    """
+    st_r = np.asarray(spec.stakes_r, dtype=np.float64)
+    adv = np.asarray(spec.byz_ack_advance, dtype=np.int64)
+    fabricating = float(st_r[adv > 0].sum())
+    if fabricating >= float(spec.quack_thresh):
+        return False
+    if spec.byz_hq_advance is not None:
+        st_s = np.asarray(spec.stakes_s, dtype=np.float64)
+        hq = np.asarray(spec.byz_hq_advance, dtype=np.int64)
+        if float(st_s[hq > 0].sum()) >= float(spec.hq_thresh):
+            return False
+    return True
 
 
 def _stacked_fails(specs: Sequence[SimSpec]) -> FailArrays:
@@ -1397,6 +1580,10 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
 
     K = max(spec0.superchunk, 1)
     debug = spec0.debug_checks
+    # lanes whose adversary stakes stay inside the quorum budgets have a
+    # provable retire-implies-delivered invariant; the debug drain check
+    # asserts it per retired slot (repro.adversary safety contract)
+    retire_check = np.array([retire_safety_stakes_ok(s) for s in specs])
 
     pending: List[dict] = []   # dispatched, not yet drained (≤ 1 entry)
     obs_parts: List = []       # drained per-chunk MetricsBlock snapshots
@@ -1450,6 +1637,28 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
             if debug and not (np.asarray(qp.base) == bases).all():
                 raise RuntimeError(
                     "window base mirror diverged from device rotation")
+            # GC safety under adversaries: a retired slot must be
+            # physically held by >= 1 replica of the receiver RSM —
+            # recv_has is ground-truth receipt, so only a quorum of
+            # *fabricated* claims can quack an unreceived message, and
+            # that is provably impossible while fabricating stake stays
+            # inside the quorum budgets (retire_safety_stakes_ok).
+            # Debug-gated like the base check; repro.adversary's
+            # property tests run with it.
+            if debug and retire_check.any():
+                cnt = np.asarray(qp.count, dtype=np.int64)
+                held = np.asarray(qp.recv_has).any(axis=1)   # (B, W)
+                ret = (np.arange(held.shape[-1])[None, :] < cnt[:, None])
+                bad = ret & ~held & retire_check[:, None]
+                if bad.any():
+                    b, kk = np.argwhere(bad)[0]
+                    raise RuntimeError(
+                        f"GC safety violation: lane {b} retired window "
+                        f"slot {kk} (abs seqno {int(bases[b]) + int(kk)}) "
+                        f"that no replica has received — the frontier "
+                        f"outran an undelivered message under an "
+                        f"adversary whose stake budget should make that "
+                        f"impossible")
             if retain:
                 bases = _scatter_retired(
                     bases, qp.count,
@@ -1482,9 +1691,12 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
                 raise ValueError(
                     "fail_schedule must return one spec per lane, "
                     "differing from the originals only in failure "
-                    "masks")
+                    "masks, stakes or quorum thresholds (all traced "
+                    "inputs — anything else would force a recompile)")
             fails = _stacked_fails(new_specs)._replace(
                 commit_floor=jnp.asarray(floors, dtype=jnp.int32))
+            retire_check = np.array([retire_safety_stakes_ok(s)
+                                     for s in new_specs])
         # (b) recorder checkpoint: mandatory host interaction — flush
         # the pipeline so the captured state is exactly the boundary
         # state and the recorded trace stays bit-exact
@@ -1547,13 +1759,23 @@ def _run_windowed_batch_impl(specs: List[SimSpec], commit_floors=None, *,
                 dense_migration=new_w is None))
             if new_w is None:
                 if not retain:
+                    # the width that would have held this overflow:
+                    # enough slots above the stalled lane's frontier to
+                    # cover its dispatch head, rounded to the 64-slot
+                    # granularity stream_window_slots uses
+                    span = int(need_b[b_worst]) + 1 - int(bases[b_worst])
+                    suggest = int(-(-span // 64) * 64)
                     raise RuntimeError(
                         "stream session window overflow: the dense "
                         "fallback would allocate the full horizon "
-                        f"(W={w} -> M={m}); size the stream window for "
-                        "the offered load (see repro.stream.workload."
-                        "stream_window_slots) or lower the arrival "
-                        "rate")
+                        f"(W={w} -> M={m}). Lane {b_worst}'s dispatch "
+                        f"head is {int(need_b[b_worst])} with GC "
+                        f"frontier {int(bases[b_worst])}, so "
+                        f"stream_window_slots >= {suggest} would have "
+                        "sufficed — pass SimConfig(window_slots="
+                        f"{suggest}) (or raise the slack in repro."
+                        "stream.workload.stream_window_slots), or "
+                        "lower the arrival rate")
                 _tg = obs_begin()
                 sim_state = _migrate_dense_batch(
                     spec0, _sim(carry), bases, out_quack,

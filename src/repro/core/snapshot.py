@@ -89,7 +89,22 @@ def state_to_arrays(state, prefix: str = "") -> Dict[str, np.ndarray]:
 
 
 def state_from_arrays(cls, arrays: Dict[str, np.ndarray],
-                      prefix: str = ""):
-    """Rebuild a state NamedTuple of type ``cls`` from named arrays."""
-    return cls(**{name: np.asarray(arrays[f"{prefix}{name}"])
-                  for name in cls._fields})
+                      prefix: str = "", defaults=None):
+    """Rebuild a state NamedTuple of type ``cls`` from named arrays.
+
+    ``defaults`` maps field name -> array for fields absent from
+    ``arrays`` — the forward-compat shim for loading traces written
+    before a state field existed (e.g. pre-adversary-palette
+    ``FailArrays`` without the traced stakes/thresholds). A field
+    missing from both is a hard ``KeyError``: silently zero-filling
+    protocol state would corrupt a resume.
+    """
+    defaults = defaults or {}
+
+    def get(name):
+        key = f"{prefix}{name}"
+        if key in arrays:
+            return np.asarray(arrays[key])
+        return np.asarray(defaults[name])
+
+    return cls(**{name: get(name) for name in cls._fields})

@@ -161,6 +161,27 @@ class FailureScenario:
                               ``bcast_limit`` replicas (the §4.3 GC-stall
                               attack). (n_r,) bool.
     bcast_limit:              number of replicas a partial broadcaster reaches.
+    byz_equiv_send:           equivocating sender: its *retransmissions*
+                              carry payloads conflicting with the original,
+                              so receivers detect the mismatch and discard
+                              them (the message neither lands nor counts as
+                              heard). Originals are honest. (n_s,) bool.
+    byz_hq_advance:           sender lies in its §4.3 highest-quacked
+                              piggyback: receiver ``i`` hears
+                              ``min(true_prefix + adv + i, M)`` — a
+                              *per-receiver-conflicting* inflated claim
+                              (the equivocation form of the GC-stall
+                              attack, defended by the r_s+1 attestation
+                              quorum). 0 => honest. (n_s,) int.
+    byz_ack_stale:            receiver replays its previous QUACK ack to
+                              each sender verbatim (stale cum counter,
+                              stale claims, stale complaint list) instead
+                              of reporting fresh state. (n_r,) bool.
+    drop_pair:                selective network fault: messages (originals
+                              and retransmissions alike) from sender ``l``
+                              to receiver ``j`` are silently dropped when
+                              ``drop_pair[l][j]``; acks still flow.
+                              Shape (n_s, n_r) bool (tuple of tuples).
     """
 
     crash_s: Optional[Tuple[int, ...]] = None
@@ -171,15 +192,83 @@ class FailureScenario:
     byz_ack_low: Optional[Tuple[bool, ...]] = None
     byz_bcast_partial: Optional[Tuple[bool, ...]] = None
     bcast_limit: int = 0
+    byz_equiv_send: Optional[Tuple[bool, ...]] = None
+    byz_hq_advance: Optional[Tuple[int, ...]] = None
+    byz_ack_stale: Optional[Tuple[bool, ...]] = None
+    drop_pair: Optional[Tuple[Tuple[bool, ...], ...]] = None
 
     @classmethod
     def none(cls) -> "FailureScenario":
         return cls()
 
+    def validate(self, n_s: int, n_r: int,
+                 steps: Optional[int] = None) -> "FailureScenario":
+        """Shape/range-check the masks against an RSM pair (and horizon).
+
+        Raises ``ValueError`` naming the offending field instead of
+        letting a wrong-length mask fail deep inside tracing (or a
+        beyond-horizon crash step silently no-op). Returns ``self`` so
+        call sites can validate inline.
+        """
+        def _len(name, val, n):
+            if val is not None and len(val) != n:
+                raise ValueError(
+                    f"FailureScenario.{name} has {len(val)} entries, "
+                    f"RSM has {n} replicas (one entry per replica)")
+
+        for name, n in (("crash_s", n_s), ("byz_send_drop", n_s),
+                        ("byz_equiv_send", n_s), ("byz_hq_advance", n_s)):
+            _len(name, getattr(self, name), n)
+        for name in ("crash_r", "byz_recv_drop", "byz_ack_advance",
+                     "byz_ack_low", "byz_bcast_partial", "byz_ack_stale"):
+            _len(name, getattr(self, name), n_r)
+        if self.drop_pair is not None:
+            if len(self.drop_pair) != n_s or any(
+                    len(row) != n_r for row in self.drop_pair):
+                raise ValueError(
+                    f"FailureScenario.drop_pair must be (n_s={n_s}, "
+                    f"n_r={n_r}); got "
+                    f"{(len(self.drop_pair),) + tuple(set(len(r) for r in self.drop_pair))}")
+        for name in ("crash_s", "crash_r"):
+            val = getattr(self, name)
+            if val is None:
+                continue
+            for j, step in enumerate(val):
+                if step < -1:
+                    raise ValueError(
+                        f"FailureScenario.{name}[{j}] = {step}: crash "
+                        f"steps must be >= 0 (-1 = never crashes)")
+                if steps is not None and step >= steps:
+                    raise ValueError(
+                        f"FailureScenario.{name}[{j}] = {step} is beyond "
+                        f"the run horizon (steps = {steps}); the crash "
+                        f"would silently never happen — use -1 for "
+                        f"'never' or lower the crash step")
+        if self.byz_hq_advance is not None and any(
+                a < 0 for a in self.byz_hq_advance):
+            raise ValueError("FailureScenario.byz_hq_advance entries must "
+                             "be >= 0 (0 = honest)")
+        if self.byz_ack_advance is not None and any(
+                a < 0 for a in self.byz_ack_advance):
+            raise ValueError("FailureScenario.byz_ack_advance entries "
+                             "must be >= 0 (0 = honest)")
+        if self.bcast_limit < 0:
+            raise ValueError("FailureScenario.bcast_limit must be >= 0")
+        return self
+
     @classmethod
     def crash_fraction(cls, n_s: int, n_r: int, frac: float,
                        seed: int = 0, at_step: int = 0) -> "FailureScenario":
         """Paper §6.2: randomly fail ``frac`` of replicas (send nothing)."""
+        if not 0.0 <= frac <= 1.0:
+            raise ValueError(f"crash_fraction frac must be in [0, 1], "
+                             f"got {frac}")
+        if at_step < 0:
+            raise ValueError(f"crash_fraction at_step must be >= 0, "
+                             f"got {at_step}")
+        if n_s <= 0 or n_r <= 0:
+            raise ValueError(f"crash_fraction needs positive replica "
+                             f"counts, got n_s={n_s}, n_r={n_r}")
         rng = np.random.RandomState(seed)
         ks = max(0, min(int(round(frac * n_s)), n_s - 1))
         kr = max(0, min(int(round(frac * n_r)), n_r - 1))

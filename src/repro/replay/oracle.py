@@ -21,11 +21,10 @@ from __future__ import annotations
 from typing import Optional
 
 from ..core.refsim import RefResult, run_reference
-from ..core.simulator import spec_failures
 from ..topology.refmirror import (RefTopologyResult,
                                   run_topology_reference)
 from .replay import (InjectionSet, _normalize_injections,
-                     _validate_injection, scenario_swaps)
+                     _validate_injection, spec_swaps)
 from .trace import RunTrace
 
 __all__ = ["replay_oracle", "replay_topology_oracle"]
@@ -33,10 +32,9 @@ __all__ = ["replay_oracle", "replay_topology_oracle"]
 
 def _trace_swaps(trace: RunTrace, by_lane):
     """Swap points for a trace's lanes (shared merge rule — the oracle
-    applies the exact scenario lists the engine schedule was built
-    from)."""
-    swaps, _ = scenario_swaps([spec_failures(s) for s in trace.specs],
-                              by_lane)
+    applies the exact spec lists the engine schedule was built from,
+    masks and stake/threshold reconfigurations alike)."""
+    swaps, _ = spec_swaps(trace.specs, by_lane)
     return swaps
 
 

@@ -23,7 +23,7 @@ import dataclasses
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from ..core.simulator import (SimResult, SimSpec, _run_windowed_batch,
-                              spec_failures, spec_with_failures)
+                              spec_with_failures, spec_with_quorum)
 from ..core.types import FailureScenario
 from ..obs.tracer import obs_span
 from ..topology.engine import (TopologyResult, _floor_plan, link_specs,
@@ -33,7 +33,7 @@ from .trace import Injection, RunTrace, TraceRecorder
 
 __all__ = ["record_simulation", "record_batch", "record_topology",
            "replay", "replay_topology", "build_fail_schedule",
-           "scenario_swaps"]
+           "scenario_swaps", "spec_swaps", "apply_injection"]
 
 # per-lane edit sets: a bare sequence applies to lane 0 (the common
 # single-link case); a mapping keys lanes by index or lane name.
@@ -143,28 +143,30 @@ def _validate_injection(trace: RunTrace, inj: Injection,
         raise ValueError(
             f"injection at round {inj.at_step} outside the replayed "
             f"range [{from_step}, {trace.steps})")
-    f = inj.failures
-    for name, n in (("crash_s", spec.n_s), ("byz_send_drop", spec.n_s),
-                    ("crash_r", spec.n_r), ("byz_recv_drop", spec.n_r),
-                    ("byz_ack_advance", spec.n_r),
-                    ("byz_ack_low", spec.n_r),
-                    ("byz_bcast_partial", spec.n_r)):
-        v = getattr(f, name)
+    if inj.failures is None and not inj.reconfigures:
+        raise ValueError(
+            f"injection at round {inj.at_step} edits nothing: give "
+            f"failure masks, a stake re-weight, or both")
+    if inj.failures is not None:
+        # full palette validation (shapes, crash horizons, lie ranges)
+        inj.failures.validate(spec.n_s, spec.n_r, trace.steps)
+    for name, n in (("stakes_s", spec.n_s), ("stakes_r", spec.n_r)):
+        v = getattr(inj, name)
         if v is not None and len(v) != n:
-            raise ValueError(f"injection failure mask {name} has "
-                             f"{len(v)} entries, RSM has {n} replicas")
+            raise ValueError(f"injection {name} has {len(v)} entries, "
+                             f"RSM has {n} replicas")
 
 
 def scenario_swaps(base_scenarios: Sequence[FailureScenario],
                    by_lane: Dict[int, List[Injection]]):
-    """Merge per-lane edits into cumulative swap points.
+    """Merge per-lane *mask* edits into cumulative swap points.
 
-    The single home of the timeline-merge rule (engine schedules and the
-    numpy oracles both layer on it, so they cannot drift): returns
-    ``(swaps, final)`` where ``swaps`` maps each edited chunk-boundary
-    round to the full per-lane scenario list in force from that round on
-    — unedited lanes keep their current masks through every swap — and
-    ``final`` is each lane's scenario at the end of the run.
+    Returns ``(swaps, final)`` where ``swaps`` maps each edited
+    chunk-boundary round to the full per-lane scenario list in force
+    from that round on — unedited lanes keep their current masks through
+    every swap — and ``final`` is each lane's scenario at the end.
+    Reconfiguration (stake/threshold) edits are invisible here; the
+    full merge rule including them is :func:`spec_swaps`.
     """
     current = list(base_scenarios)
     swaps: Dict[int, List[FailureScenario]] = {}
@@ -172,8 +174,50 @@ def scenario_swaps(base_scenarios: Sequence[FailureScenario],
                      for e in edits}):
         for lane, edits in by_lane.items():
             for e in edits:
-                if e.at_step == t:
+                if e.at_step == t and e.failures is not None:
                     current[lane] = e.failures
+        swaps[t] = list(current)
+    return swaps, current
+
+
+def apply_injection(spec: SimSpec, inj: Injection) -> SimSpec:
+    """Overlay one edit onto a lane's current spec (masks, then quorum).
+
+    Both halves are traced-input rewrites (``spec_with_failures`` /
+    ``spec_with_quorum``), so the result shares the input spec's
+    compiled chunk programs.
+    """
+    s = spec
+    if inj.failures is not None:
+        s = spec_with_failures(s, inj.failures)
+    if inj.reconfigures:
+        s = spec_with_quorum(s, stakes_s=inj.stakes_s,
+                             stakes_r=inj.stakes_r,
+                             quack_thresh=inj.quack_thresh,
+                             dup_thresh=inj.dup_thresh,
+                             hq_thresh=inj.hq_thresh)
+    return s
+
+
+def spec_swaps(base_specs: Sequence[SimSpec],
+               by_lane: Dict[int, List[Injection]]):
+    """Merge per-lane edits into cumulative spec-level swap points.
+
+    The single home of the timeline-merge rule (engine schedules and the
+    numpy oracles both layer on it, so they cannot drift): returns
+    ``(swaps, final)`` where ``swaps`` maps each edited chunk-boundary
+    round to the full per-lane *spec* list in force from that round on —
+    masks AND stakes/thresholds, cumulatively overlaid in ``at_step``
+    order — and ``final`` is each lane's spec at the end of the run.
+    """
+    current = list(base_specs)
+    swaps: Dict[int, List[SimSpec]] = {}
+    for t in sorted({e.at_step for edits in by_lane.values()
+                     for e in edits}):
+        for lane, edits in by_lane.items():
+            for e in edits:
+                if e.at_step == t:
+                    current[lane] = apply_injection(current[lane], e)
         swaps[t] = list(current)
     return swaps, current
 
@@ -183,19 +227,16 @@ def build_fail_schedule(trace: RunTrace,
                         specs: Optional[List[SimSpec]] = None):
     """Compile per-lane edits into the engine's ``fail_schedule`` fn.
 
-    Returns ``(schedule, final_scenarios)``: ``schedule(t)`` yields the
-    full per-lane spec list whenever any lane's masks change at ``t``
-    (``None`` otherwise), per the :func:`scenario_swaps` merge rule.
+    Returns ``(schedule, final_specs)``: ``schedule(t)`` yields the
+    full per-lane spec list whenever any lane's masks, stakes or
+    thresholds change at ``t`` (``None`` otherwise), per the
+    :func:`spec_swaps` merge rule.
     """
     specs = list(trace.specs) if specs is None else list(specs)
-    swaps, current = scenario_swaps([spec_failures(s) for s in specs],
-                                    by_lane)
-    spec_swaps = {t: [spec_with_failures(s, f)
-                      for s, f in zip(specs, scenarios)]
-                  for t, scenarios in swaps.items()}
+    swaps, current = spec_swaps(specs, by_lane)
 
     def schedule(t: int):
-        return spec_swaps.get(int(t))
+        return swaps.get(int(t))
 
     return schedule, list(current)
 

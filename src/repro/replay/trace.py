@@ -37,14 +37,36 @@ _FORMAT_VERSION = 1
 
 @dataclasses.dataclass(frozen=True)
 class Injection:
-    """One schedule edit: from round ``at_step`` (a chunk boundary) on,
-    the lane's failure masks are replaced by ``failures`` — crash or
-    recover a replica, open or heal a partition, change drop schedules.
-    ``at_step`` must be a multiple of the run's ``chunk_steps``; masks
-    are traced inputs, so applying an edit never recompiles anything."""
+    """One schedule edit taking effect at chunk boundary ``at_step``.
+
+    ``failures`` (when given) replaces the lane's failure masks wholesale
+    from round ``at_step`` on — crash or recover a replica, open or heal
+    a partition, change drop/lie schedules. The quorum fields (when
+    given) re-weight the lane's stakes / thresholds from the same round —
+    the mid-stream *reconfiguration* primitive: a membership change is a
+    crash-mask flip (remove = crash at ``at_step``; add = flip a replica
+    that was "crashed since round 0" back to ``-1``) plus a stake
+    re-weight moving the new member's stake and the u/r quorum thresholds
+    (``simulator.spec_with_quorum``). Both ride the traced ``FailArrays``,
+    so applying an edit never recompiles anything; edits compose
+    cumulatively (a later injection overlays the lane state the earlier
+    ones produced). ``at_step`` must be a multiple of the run's
+    ``chunk_steps``."""
 
     at_step: int
-    failures: FailureScenario
+    failures: Optional[FailureScenario] = None
+    stakes_s: Optional[tuple] = None
+    stakes_r: Optional[tuple] = None
+    quack_thresh: Optional[float] = None
+    dup_thresh: Optional[float] = None
+    hq_thresh: Optional[float] = None
+
+    @property
+    def reconfigures(self) -> bool:
+        """True when this edit changes stakes or quorum thresholds."""
+        return any(v is not None for v in (
+            self.stakes_s, self.stakes_r, self.quack_thresh,
+            self.dup_thresh, self.hq_thresh))
 
 
 class TraceRecorder:
@@ -177,6 +199,8 @@ class RunTrace:
                 raise ValueError(
                     f"trace format v{meta['version']} != "
                     f"v{_FORMAT_VERSION}")
+            specs = [_spec_from_json(s) for s in meta["specs"]]
+            fail_defaults = _fail_array_defaults(specs)
             checkpoints = []
             for i, cm in enumerate(meta["checkpoints"]):
                 p = f"c{i}."
@@ -185,7 +209,8 @@ class RunTrace:
                     window_slots=int(cm["window_slots"]),
                     bases=d[p + "bases"],
                     state=state_from_arrays(SimState, d, p + "state."),
-                    fails=state_from_arrays(FailArrays, d, p + "fails."),
+                    fails=state_from_arrays(FailArrays, d, p + "fails.",
+                                            defaults=fail_defaults),
                     floors=d[p + "floors"],
                     out_quack=d[p + "out_quack"],
                     out_deliver=d[p + "out_deliver"],
@@ -207,7 +232,7 @@ class RunTrace:
                 if meta["topology"] is not None else None)
         return cls(
             kind=meta["kind"],
-            specs=[_spec_from_json(s) for s in meta["specs"]],
+            specs=specs,
             lane_names=list(meta["lane_names"]),
             floor_plan={int(k): int(v)
                         for k, v in meta["floor_plan"].items()},
@@ -217,7 +242,37 @@ class RunTrace:
         )
 
 
+def _fail_array_defaults(specs: List[SimSpec]) -> dict:
+    """Stacked-``FailArrays`` fields absent from pre-palette traces.
+
+    Adversary masks default to all-honest (the fields did not exist, so
+    nothing could have injected them), and the traced stakes/thresholds
+    default to each lane's *spec* values — NOT neutral ones: a resumed
+    old trace must run the same quorum rules it was recorded under.
+    """
+    b, n_s, n_r = len(specs), specs[0].n_s, specs[0].n_r
+    return dict(
+        byz_equiv_send=np.zeros((b, n_s), dtype=bool),
+        byz_hq_advance=np.zeros((b, n_s), dtype=np.int32),
+        byz_ack_stale=np.zeros((b, n_r), dtype=bool),
+        drop_pair=np.zeros((b, n_s, n_r), dtype=bool),
+        stakes_s=np.asarray([s.stakes_s for s in specs], dtype=np.float32),
+        stakes_r=np.asarray([s.stakes_r for s in specs], dtype=np.float32),
+        quack_thresh=np.asarray([s.quack_thresh for s in specs],
+                                dtype=np.float32),
+        dup_thresh=np.asarray([s.dup_thresh for s in specs],
+                              dtype=np.float32),
+        hq_thresh=np.asarray([s.hq_thresh for s in specs],
+                             dtype=np.float32),
+    )
+
+
 # --- dataclass <-> json (tuples come back from JSON as lists) -------------
+
+def _deep_tuple(v):
+    return (tuple(_deep_tuple(x) for x in v) if isinstance(v, list)
+            else v)
+
 
 def _retuple(cls, d: dict):
     fields = {}
@@ -226,8 +281,10 @@ def _retuple(cls, d: dict):
             # field added after the trace was written: keep its default
             # (new fields must always be default-compatible additions)
             continue
-        v = d[f.name]
-        fields[f.name] = tuple(v) if isinstance(v, list) else v
+        # deep: nested masks like ``drop_pair`` must come back as tuples
+        # of tuples, or spec equality (the replay zero-recompile check
+        # compares ``_neutral`` specs) would break on list != tuple
+        fields[f.name] = _deep_tuple(d[f.name])
     return cls(**fields)
 
 

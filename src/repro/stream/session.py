@@ -253,10 +253,37 @@ class StreamSession:
     def _specs(self) -> List[SimSpec]:
         return [self.spec] * max(self.config.links, 1)
 
-    def run(self, tracer: Optional[SpanTracer] = None) -> StreamResult:
+    def _compile_schedule(self, fail_schedule, n_lanes: int):
+        """Normalize an attack schedule into the engine callback.
+
+        Accepts the engine's native callable form, or a mapping
+        ``{round: FailureScenario | SimSpec}`` applied to every lane —
+        the convenient way to switch a palette adversary on and off
+        mid-stream (``{t_on: scenario, t_off: FailureScenario.none()}``)
+        and watch the SLO watchdogs breach and recover. Swap rounds
+        must be chunk boundaries (the only host-observable points).
+        """
+        if fail_schedule is None or callable(fail_schedule):
+            return fail_schedule
+        chunk = max(self.spec.chunk_steps, 1)
+        swaps = {}
+        for t, f in fail_schedule.items():
+            if int(t) % chunk != 0:
+                raise ValueError(
+                    f"attack schedule round {t} is not a chunk boundary "
+                    f"(chunk_steps={chunk}); swaps can only take effect "
+                    f"where the scan state is host-observable")
+            s = f if isinstance(f, SimSpec) else \
+                spec_with_failures(self.spec, f)
+            swaps[int(t)] = [s] * n_lanes
+        return lambda t: swaps.get(int(t))
+
+    def run(self, tracer: Optional[SpanTracer] = None,
+            fail_schedule=None) -> StreamResult:
         cfg = self.config
         specs = self._specs()
         n_lanes = len(specs)
+        schedule = self._compile_schedule(fail_schedule, n_lanes)
         arrivals_cum = np.concatenate(
             [[0], np.cumsum(self.arrivals)]).astype(np.int64)
         agg = LiveAggregator(n_lanes, arrivals_cum,
@@ -276,6 +303,7 @@ class StreamSession:
             with tracing(tracer):
                 out = _run_windowed_batch(specs,
                                           commit_floors=commit_floors,
+                                          fail_schedule=schedule,
                                           drain_sink=sink)
             assert out == []          # horizon mode returns no mirrors
         finally:

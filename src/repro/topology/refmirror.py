@@ -24,7 +24,8 @@ from typing import Dict, List
 import numpy as np
 
 from ..core.refsim import RefResult, _RefMachine
-from ..core.simulator import _max_msg_by_round, _widen_on_overflow
+from ..core.simulator import (SimSpec, _max_msg_by_round,
+                              _widen_on_overflow, spec_failures)
 from .engine import (LinkAccessors, TopologyAccessors, _floor_plan,
                      link_specs, plan_floors)
 from .graph import LinkSpec, Topology
@@ -49,10 +50,12 @@ class RefTopologyResult(TopologyAccessors):
 
 def run_topology_reference(topo: Topology,
                            fail_schedule=None) -> RefTopologyResult:
-    """Oracle topology run; ``fail_schedule(t)`` may return one
-    ``FailureScenario`` per link at a chunk start to swap the masks in
-    force from round ``t`` on (the numpy twin of the engine's mid-stream
-    ``FailArrays`` swap — replay-with-injection ground truth)."""
+    """Oracle topology run; ``fail_schedule(t)`` may return one entry
+    per link at a chunk start to swap the failure state in force from
+    round ``t`` on (the numpy twin of the engine's mid-stream
+    ``FailArrays`` swap — replay-with-injection ground truth). Each
+    entry is a ``FailureScenario`` (mask swap) or a full ``SimSpec``
+    (mask swap plus stake/threshold reconfiguration)."""
     specs = link_specs(topo)
     spec0 = specs[0]
     n_l, m = len(specs), spec0.m
@@ -72,7 +75,11 @@ def run_topology_reference(topo: Topology,
             new_fails = fail_schedule(t)
             if new_fails is not None:
                 for mac, f in zip(machines, new_fails):
-                    mac.set_failures(f)
+                    if isinstance(f, SimSpec):
+                        mac.set_quorum(f)
+                        mac.set_failures(spec_failures(f))
+                    else:
+                        mac.set_failures(f)
         # commit floors for this chunk: a chained link may originate only
         # what its upstream link has retired (durably delivered) so far.
         floors = plan_floors(up, n_l, m, bases)

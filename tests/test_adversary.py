@@ -1,0 +1,400 @@
+"""Byzantine adversary palette: oracle equivalence, retirement safety,
+mid-stream reconfiguration, and streaming SLO degradation.
+
+Every palette adversary (equivocating senders, stale/replayed QUACK
+acks, §4.3 highest-quacked liars, selective per-pair drops, greedy
+stake-weighted quorum attacks) must be mirrored bit-exactly by the numpy
+oracle across the dense, windowed, superchunk-fused and Pallas-kernel
+engine paths, and across chained multi-link topologies. The §4.3
+retirement-safety invariant — no undelivered message is ever retired by
+the GC frontier — must hold for every scenario whose fabricating stake
+stays inside the provable budget (``repro.adversary.safety``). Mid-stream
+reconfigurations (remove/join a replica, re-weight stakes) replay
+bit-exactly against both a from-scratch run and the oracle with zero
+warm recompiles, and a streaming session under each attack degrades
+visibly (SLO watchdog breach) and recovers after the heal.
+
+The oracle-equivalence and safety sweeps are seeded and always run; a
+hypothesis twin widens the same properties to random adversary
+placements when hypothesis is installed.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.adversary import (ADVERSARY_KINDS, adversary_scenario,
+                             assert_safe_retirement, equivocators, hq_liars,
+                             join_receiver, quorum_budget, remove_receiver,
+                             selective_drops, stake_attack, stale_ackers,
+                             streaming_attack)
+from repro.core import FailureScenario, RSMConfig, SimConfig
+from repro.core.refsim import run_reference
+from repro.core.simulator import (build_spec, chunk_trace_count,
+                                  run_simulation, spec_with_quorum)
+from repro.obs.live import SLOConfig
+from repro.replay import (Injection, RunTrace, record_simulation, replay,
+                          replay_oracle)
+from repro.stream.session import StreamConfig, StreamSession
+from repro.topology import Topology, run_topology, run_topology_reference
+
+BFT1 = RSMConfig(n=4, u=1, r=1)
+OUTPUTS = ("quack_time", "deliver_time", "retry", "recv_has")
+METRICS = ("cross_msgs", "intra_msgs", "resends")
+
+
+def _sim(windowed: bool, superchunk: int = 1, **kw) -> SimConfig:
+    base = dict(n_msgs=48, steps=64, window=2, phi=3, seed=7)
+    if windowed:
+        base.update(window_slots=64, chunk_steps=8, superchunk=superchunk)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _assert_engine_matches_oracle(spec, ctx: str):
+    res = run_simulation(spec)
+    ref = run_reference(spec)
+    for f in OUTPUTS:
+        assert np.array_equal(np.asarray(getattr(res, f)),
+                              getattr(ref, f)), (ctx, f)
+    for f in METRICS:
+        assert np.array_equal(np.asarray(getattr(res.metrics, f)),
+                              getattr(ref, f)), (ctx, f)
+    if res.gc_frontiers is not None and ref.gc_frontiers is not None:
+        assert np.array_equal(np.asarray(res.gc_frontiers),
+                              ref.gc_frontiers), ctx
+    return res, ref
+
+
+# --------------------------------------------------------------- palette
+
+def test_palette_mask_validation():
+    with pytest.raises(ValueError, match="out of range"):
+        equivocators(4, (4,))
+    with pytest.raises(ValueError, match="out of range"):
+        stale_ackers(4, (-1,))
+    with pytest.raises(ValueError, match="advance"):
+        hq_liars(4, (0,), advance=0)
+    with pytest.raises(ValueError, match="out of range"):
+        selective_drops(4, 4, [(0, 5)])
+    with pytest.raises(ValueError, match="side"):
+        stake_attack((1.0,) * 4, 2.0, side="auditor")
+    with pytest.raises(ValueError, match="unknown adversary kind"):
+        adversary_scenario("bribery", 4, 4)
+    with pytest.raises(ValueError, match="unknown adversary kind"):
+        streaming_attack("bribery", 4, 4)
+
+
+def test_palette_scenarios_validate():
+    """Every generated scenario passes FailureScenario.validate for the
+    RSM pair it was built for (shape contract of build_spec)."""
+    for kind in ADVERSARY_KINDS:
+        for seed in range(3):
+            sc = adversary_scenario(kind, 4, 4, seed=seed)
+            sc.validate(4, 4, 64)
+        streaming_attack(kind, 4, 4).validate(4, 4, 64)
+
+
+def test_stake_attack_respects_budget():
+    """The greedy coalition is maximal but stays strictly below the
+    threshold — the strongest adversary the safety argument admits."""
+    sc = stake_attack((3.0, 2.0, 1.0, 1.0), 4.0, side="receiver")
+    adv = np.asarray(sc.byz_ack_advance) > 0
+    st = np.asarray((3.0, 2.0, 1.0, 1.0))
+    assert 0 < st[adv].sum() < 4.0
+    # greedy: the stake-3 replica must be in (3 < 4), stake-2 not (5 >= 4)
+    assert adv[0] and not adv[1]
+    spec = build_spec(BFT1, BFT1, _sim(True), failures=sc)
+    spec = spec_with_quorum(spec, stakes_r=(3.0, 2.0, 1.0, 1.0),
+                            quack_thresh=4.0)
+    budget = quorum_budget(spec)
+    assert budget.provable and budget.receiver_margin > 0
+
+
+def test_quorum_budget_detects_owned_quorum():
+    """A coalition at or above the threshold is not provable, and the
+    safety assertion refuses to bless it."""
+    sc = FailureScenario(byz_ack_advance=(4, 4, 0, 0))
+    spec = build_spec(BFT1, BFT1, _sim(True), failures=sc)
+    assert not quorum_budget(spec).provable
+    with pytest.raises(ValueError, match="not provable"):
+        assert_safe_retirement(spec, run_reference(spec))
+
+
+# ----------------------------------------------- oracle equivalence sweep
+
+ENGINE_PATHS = [("dense", False, 1), ("windowed", True, 1),
+                ("superchunk", True, 8)]
+
+
+@pytest.mark.parametrize("kind", ADVERSARY_KINDS)
+@pytest.mark.parametrize("path,windowed,k", ENGINE_PATHS,
+                         ids=[p[0] for p in ENGINE_PATHS])
+def test_adversary_matches_oracle(kind, path, windowed, k):
+    """Seeded sweep: every adversary kind is bit-identical between the
+    engine (dense / windowed / superchunk-fused) and the numpy oracle,
+    including per-step wire metrics, and never retires an undelivered
+    message."""
+    for seed in (0, 1):
+        sc = adversary_scenario(kind, 4, 4, seed=seed)
+        spec = build_spec(BFT1, BFT1, _sim(windowed, k), failures=sc)
+        res, ref = _assert_engine_matches_oracle(
+            spec, f"{kind}/{path}/seed{seed}")
+        if windowed:
+            assert ref.retired_undelivered == 0, (kind, seed)
+            if quorum_budget(spec).provable:
+                assert_safe_retirement(spec, ref)
+                assert_safe_retirement(spec, res)
+
+
+@pytest.mark.parametrize("kind", ADVERSARY_KINDS)
+def test_adversary_pallas_quack_matches(kind):
+    """The Pallas quorum kernel agrees with the oracle under every
+    adversary kind (interpret mode off-TPU)."""
+    sc = adversary_scenario(kind, 4, 4, seed=0)
+    spec = build_spec(BFT1, BFT1, _sim(True, use_pallas_quack=True),
+                      failures=sc)
+    _assert_engine_matches_oracle(spec, f"{kind}/pallas")
+
+
+def test_adversary_combo_with_quorum_reweight():
+    """Composed masks (equivocation + hq lie + stale ack + drops + a
+    crash) under a non-uniform stake vector still mirror the oracle."""
+    dp = tuple(tuple(i == 0 and j in (0, 2) for j in range(4))
+               for i in range(4))
+    sc = FailureScenario(byz_equiv_send=(True, False, False, False),
+                         byz_hq_advance=(0, 2, 0, 0),
+                         byz_ack_stale=(False, True, False, False),
+                         drop_pair=dp, crash_r=(-1, -1, -1, 30))
+    for windowed in (False, True):
+        spec = build_spec(BFT1, BFT1, _sim(windowed), failures=sc)
+        spec = spec_with_quorum(spec, stakes_r=(2.0, 1.0, 1.0, 1.0),
+                                quack_thresh=3.0)
+        _assert_engine_matches_oracle(spec, f"combo/windowed={windowed}")
+
+
+def test_adversary_chain_matches_oracle():
+    """Chained topology with a different adversary on each hop: the
+    vmapped engine and the multi-link numpy mirror agree bit-for-bit."""
+    sim = SimConfig(n_msgs=24, steps=80, window=1, phi=6, window_slots=16,
+                    chunk_steps=4)
+    topo = Topology.chain(
+        ["a", "b", "c"], BFT1, sim,
+        failures={"a->b": adversary_scenario("stale_ack", 4, 4, seed=1),
+                  "b->c": selective_drops(4, 4, [(0, 0), (1, 2)])})
+    er = run_topology(topo)
+    rr = run_topology_reference(topo)
+    for lname in topo.link_names:
+        for out in OUTPUTS:
+            assert np.array_equal(
+                np.asarray(getattr(er[lname].result, out)),
+                np.asarray(getattr(rr[lname].result, out))), (lname, out)
+        assert np.array_equal(er[lname].result.gc_frontiers,
+                              rr[lname].result.gc_frontiers), lname
+
+
+# ------------------------------------------------- hypothesis widening
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def adversary_specs(draw):
+        """Random palette scenario + engine path + optional stake
+        re-weight, with the fabricating stake kept inside the provable
+        §4.3 budget."""
+        kind = draw(st.sampled_from(ADVERSARY_KINDS))
+        seed = draw(st.integers(0, 63))
+        sc = adversary_scenario(kind, 4, 4, seed=seed)
+        windowed = draw(st.booleans())
+        k = draw(st.sampled_from([1, 8])) if windowed else 1
+        spec = build_spec(BFT1, BFT1,
+                          _sim(windowed, k, seed=draw(st.integers(0, 7))),
+                          failures=sc)
+        if draw(st.booleans()):
+            # re-weight one honest replica's stake upward and raise the
+            # QUACK threshold with it (membership-weight churn)
+            boosted = draw(st.integers(2, 3))
+            stakes = tuple(2.0 if i == boosted else 1.0 for i in range(4))
+            spec = spec_with_quorum(spec, stakes_r=stakes,
+                                    quack_thresh=3.0, dup_thresh=2.0)
+        return spec, f"{kind}/seed{seed}/windowed={windowed}/K={k}"
+
+    @settings(max_examples=20, deadline=None)
+    @given(adversary_specs())
+    def test_property_adversary_oracle_and_gc_safety(drawn):
+        """Random adversary placements: engine ≡ oracle bit-for-bit, and
+        provable stake budgets never retire an undelivered message."""
+        spec, ctx = drawn
+        res, ref = _assert_engine_matches_oracle(spec, ctx)
+        if ref.retired_undelivered is not None:
+            assert ref.retired_undelivered == 0, ctx
+            if quorum_budget(spec).provable:
+                assert_safe_retirement(spec, ref)
+                assert_safe_retirement(spec, res)
+
+
+# --------------------------------------------- mid-stream reconfiguration
+
+REPLAY_SIM = SimConfig(n_msgs=64, steps=64, window=2, phi=3, seed=3,
+                       window_slots=64, chunk_steps=16)
+
+
+def _assert_replay_consistent(trace, inj, resume_t):
+    """Replay-from-checkpoint ≡ from-scratch engine ≡ numpy oracle."""
+    ri = replay(trace, resume_t, inj)[0]
+    scratch = replay(trace, 0, inj)[0]
+    ref = replay_oracle(trace, inj)
+    for f in OUTPUTS:
+        a = np.asarray(getattr(ri, f))
+        assert np.array_equal(a, np.asarray(getattr(scratch, f))), f
+        assert np.array_equal(a, getattr(ref, f)), f
+    return ri
+
+
+def test_remove_receiver_reconfig_replays_bitexact():
+    spec = build_spec(BFT1, BFT1, REPLAY_SIM)
+    _, trace = record_simulation(spec)
+    inj = [remove_receiver(4, 3, 16, stakes_r=(1.0, 1.0, 1.0, 1.0),
+                           quack_thresh=2.0, dup_thresh=2.0)]
+    assert inj[0].reconfigures and inj[0].failures.crash_r[3] == 16
+    ri = _assert_replay_consistent(trace, inj, 16)
+    # the shrunk membership still delivers the whole stream
+    assert (np.asarray(ri.deliver_time) >= 0).all()
+
+
+def test_join_receiver_reconfig_replays_bitexact():
+    """The base run models the future member as crashed-from-0 with zero
+    stake; the injection weights it in at a chunk boundary."""
+    spec = build_spec(BFT1, BFT1, REPLAY_SIM,
+                      failures=FailureScenario(crash_r=(-1, -1, -1, 0)))
+    spec = spec_with_quorum(spec, stakes_r=(1.0, 1.0, 1.0, 0.0))
+    _, trace = record_simulation(spec)
+    inj = [join_receiver(4, 3, 32, stakes_r=(1.0, 1.0, 1.0, 1.0),
+                         quack_thresh=2.0, dup_thresh=2.0)]
+    ri = _assert_replay_consistent(trace, inj, 32)
+    assert (np.asarray(ri.deliver_time) >= 0).all()
+
+
+def test_adversary_injection_replays_bitexact():
+    spec = build_spec(BFT1, BFT1, REPLAY_SIM)
+    _, trace = record_simulation(spec)
+    dp = tuple(tuple(i == 1 and j == 2 for j in range(4)) for i in range(4))
+    inj = [Injection(32, failures=FailureScenario(
+        byz_ack_stale=(False, True, False, False), drop_pair=dp))]
+    _assert_replay_consistent(trace, inj, 32)
+
+
+def test_stake_reweight_injection_replays_bitexact():
+    """A pure quorum-rule edit (no mask change) is a valid injection."""
+    spec = build_spec(BFT1, BFT1, REPLAY_SIM)
+    _, trace = record_simulation(spec)
+    inj = [Injection(16, stakes_r=(2.0, 1.0, 1.0, 1.0), quack_thresh=3.0)]
+    _assert_replay_consistent(trace, inj, 16)
+
+
+def test_empty_injection_rejected():
+    spec = build_spec(BFT1, BFT1, REPLAY_SIM)
+    _, trace = record_simulation(spec)
+    with pytest.raises(ValueError, match="edits nothing"):
+        replay(trace, 16, [Injection(16)])
+
+
+def test_reconfig_zero_warm_recompiles():
+    """Swapping membership, stakes and adversary masks mid-replay rides
+    entirely on traced inputs: after one warm-up replay, arbitrarily
+    different reconfigurations trace zero new chunk programs."""
+    spec = build_spec(BFT1, BFT1, REPLAY_SIM)
+    _, trace = record_simulation(spec)
+    warmup = [remove_receiver(4, 3, 16, stakes_r=(1.0,) * 4,
+                              quack_thresh=2.0, dup_thresh=2.0)]
+    replay(trace, 16, warmup)
+    before = chunk_trace_count()
+    variants = [
+        [remove_receiver(4, 2, 32, stakes_r=(1.0,) * 4,
+                         quack_thresh=2.0, dup_thresh=2.0)],
+        [Injection(16, stakes_r=(2.0, 1.0, 1.0, 1.0), quack_thresh=3.0)],
+        [Injection(32, failures=streaming_attack("selective_drop", 4, 4))],
+        [Injection(16, failures=adversary_scenario("equivocate", 4, 4)),
+         Injection(48, stakes_r=(1.0, 2.0, 1.0, 1.0), quack_thresh=3.0)],
+    ]
+    for inj in variants:
+        replay(trace, 16, inj)
+    assert chunk_trace_count() == before, \
+        "reconfiguration forced a chunk retrace"
+
+
+def test_trace_roundtrip_preserves_adversary_state(tmp_path):
+    """Traces recorded under adversary masks + re-weighted quorums
+    survive an npz save/load and replay identically."""
+    sc = adversary_scenario("selective_drop", 4, 4, seed=2)
+    spec = build_spec(BFT1, BFT1, REPLAY_SIM, failures=sc)
+    spec = spec_with_quorum(spec, stakes_r=(2.0, 1.0, 1.0, 1.0),
+                            quack_thresh=3.0)
+    _, trace = record_simulation(spec)
+    inj = [Injection(32, failures=stale_ackers(4, (1,), base=sc))]
+    ri = replay(trace, 32, inj)[0]
+    path = os.path.join(str(tmp_path), "trace.npz")
+    trace.save(path)
+    t2 = RunTrace.load(path)
+    r2 = replay(t2, 32, inj)[0]
+    for f in OUTPUTS:
+        assert np.array_equal(np.asarray(getattr(ri, f)),
+                              np.asarray(getattr(r2, f))), f
+
+
+# ----------------------------------------------- streaming SLO degradation
+
+@pytest.mark.parametrize("kind", ADVERSARY_KINDS)
+def test_streaming_attack_breaches_and_recovers(kind):
+    """Graceful degradation, not just survival: each palette attack
+    switched on mid-stream trips an SLO watchdog breach, and healing it
+    produces the matching recovery event — while the stream still
+    delivers its whole horizon."""
+    sim = SimConfig(window=2, phi=3, chunk_steps=16, window_slots="auto")
+    cfg = StreamConfig(horizon=1024, utilization=0.5,
+                       slo=SLOConfig(p99_latency_rounds=24,
+                                     resend_rate=0.25,
+                                     frontier_stall_chunks=2),
+                       report_every=2)
+    sess = StreamSession(BFT1, BFT1, sim, cfg)
+    chunk = max(sess.spec.chunk_steps, 1)
+    res = sess.run(fail_schedule={4 * chunk: streaming_attack(kind, 4, 4),
+                                  16 * chunk: FailureScenario.none()})
+    assert not res.problems, (kind, res.problems)
+    breach = [e for e in res.slo_events if not e.recovered]
+    recov = [e for e in res.slo_events if e.recovered]
+    assert breach, f"{kind}: attack caused no SLO breach"
+    assert recov, f"{kind}: no SLO recovery after the heal"
+    assert all(min(e.t for e in breach) >= 4 * chunk for e in breach), kind
+
+
+# ------------------------------------------------------- bench smoke
+
+def test_bench_adversary_smoke(tmp_path, monkeypatch):
+    """Acceptance smoke for ``benchmarks.bench_adversary``: the palette
+    + reconfig sweeps run at a tiny size, write the BENCH json, and the
+    whole palette rides the honest compiled program (extra_traces 0)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if repo not in sys.path:
+        sys.path.insert(0, repo)
+    from benchmarks import bench_adversary as m
+    out = os.path.join(str(tmp_path), "BENCH_adversary.json")
+    rows = m.main(sizes=(256,), json_path=out)
+    assert os.path.exists(out)
+    pal = [r for r in rows if r["section"] == "palette"
+           and r["kind"] != "honest"]
+    assert {r["kind"] for r in pal} == set(ADVERSARY_KINDS)
+    assert all(r["delivered"] == 256 for r in pal), pal
+    assert all(r["extra_traces"] == 0 for r in rows), \
+        [r for r in rows if r["extra_traces"]]
+    assert {r["kind"] for r in rows if r["section"] == "reconfig"} == \
+        {"remove_replica", "join_replica", "stake_reweight",
+         "adversary_on_off"}
